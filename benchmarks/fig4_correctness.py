@@ -1,0 +1,72 @@
+"""Paper Fig. 4: U4(T) and m(T) across the transition, bf16 vs f32.
+
+CPU-scale reproduction of the correctness figure: small lattices, fewer
+sweeps, same physics. Asserts the three claims the figure makes:
+
+  1. U4 curves for different sizes cross near T_c,
+  2. m(T) vanishes above T_c and saturates below,
+  3. bf16 and f32 agree to MC noise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0):
+    import jax
+    from repro.core import observables as obs
+    from repro.core import sampler
+
+    tc = obs.critical_temperature()
+    temps = np.linspace(0.75 * tc, 1.25 * tc, points)
+    key = jax.random.PRNGKey(seed)
+
+    results = {}
+    for dtype in ("bfloat16", "float32"):
+        for size in sizes:
+            rows = sampler.measure_curve(key, size, temps, n_sweeps, burnin,
+                                         dtype=dtype)
+            results[(dtype, size)] = rows
+
+    # claim 1+2: ordered below, disordered above (largest size, bf16)
+    rows = results[("bfloat16", max(sizes))]
+    below = [r for r in rows if r["T"] < 0.9 * tc]
+    above = [r for r in rows if r["T"] > 1.15 * tc]
+    ok_order = all(r["m_abs"] > 0.7 for r in below)
+    ok_disorder = all(r["m_abs"] < 0.45 for r in above)
+    # U4 separates phases
+    ok_u4 = all(b["U4"] > a["U4"] for b in below for a in above)
+
+    # claim 3: bf16 vs f32 agreement
+    diffs = []
+    for size in sizes:
+        for rb, rf in zip(results[("bfloat16", size)],
+                          results[("float32", size)]):
+            diffs.append(abs(rb["m_abs"] - rf["m_abs"]))
+    bf16_agree = max(diffs) < 0.2
+
+    print(f"# fig4: sizes={sizes} sweeps={n_sweeps} points={points}")
+    print(f"# {'T/Tc':>6} | " + " | ".join(
+        f"m({s})bf16 U4({s})bf16" for s in sizes))
+    for i, t in enumerate(temps):
+        row = " | ".join(
+            f"{results[('bfloat16', s)][i]['m_abs']:.3f}     "
+            f"{results[('bfloat16', s)][i]['U4']:.3f}" for s in sizes)
+        print(f"# {t / tc:6.3f} | {row}")
+    verdict = (f"ordered_below={ok_order} disordered_above={ok_disorder} "
+               f"U4_separates={ok_u4} bf16_matches_f32={bf16_agree} "
+               f"max_bf16_f32_diff={max(diffs):.3f}")
+    emit("fig4_correctness", 0.0, verdict)
+    return ok_order and ok_disorder and ok_u4 and bf16_agree
+
+
+def main():
+    ok = run()
+    print(f"# fig4 verdict: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

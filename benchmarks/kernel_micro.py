@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: the three checkerboard backends on the same
+update, plus the acceptance-path variants (exp vs LUT) — the quantities the
+§Perf iterations move. Interpret-mode Pallas timing is NOT a TPU proxy (it
+runs the kernel body in Python); the XLA-vs-ref comparison and the
+algorithmic counts are the meaningful outputs here.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+
+
+def run(size=512, bs=128, n_sweeps=3):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import lattice as L
+    from repro.core import sampler
+    from repro.kernels import ops as kops
+
+    key = jax.random.PRNGKey(0)
+    quads = sampler.init_state(key, size, size)
+
+    # paper-faithful Algorithm 2 (XLA), exp vs LUT acceptance
+    for accept in ("exp", "lut"):
+        cfg = sampler.ChainConfig(beta=0.4406868, n_sweeps=n_sweeps,
+                                  block_size=bs, accept=accept)
+        sec = time_fn(lambda q: sampler.run_sweeps(q, key, cfg), quads)
+        emit(f"alg2_xla_{accept}_{size}", sec / n_sweeps,
+             f"flips_per_ns={n_sweeps * size * size / sec / 1e9:.4f}")
+
+    # Algorithm 1 (naive) for the paper's ~3x claim
+    from repro.core import checkerboard as cb
+    probs = jax.random.uniform(key, (size, size))
+    full = L.from_quads(quads)
+
+    @jax.jit
+    def alg1_sweep(f):
+        f = cb.update_naive(f, probs, 0.4406868, 0, block_size=bs)
+        return cb.update_naive(f, probs, 0.4406868, 1, block_size=bs)
+
+    sec1 = time_fn(alg1_sweep, full)
+    emit(f"alg1_xla_{size}", sec1,
+         f"flips_per_ns={size * size / sec1 / 1e9:.4f}")
+
+    # bf16 vs f32 lattice dtype
+    for dtype in ("bfloat16", "float32"):
+        cfg = sampler.ChainConfig(beta=0.4406868, n_sweeps=n_sweeps,
+                                  block_size=bs, dtype=dtype)
+        q = sampler.init_state(key, size, size, jnp.dtype(dtype))
+        sec = time_fn(lambda qq: sampler.run_sweeps(qq, key, cfg), q)
+        emit(f"alg2_xla_{dtype}_{size}", sec / n_sweeps,
+             f"flips_per_ns={n_sweeps * size * size / sec / 1e9:.4f}")
+
+    # ref-oracle path (pure jnp, the Pallas kernel's semantics)
+    sec = time_fn(lambda q: kops.run_sweeps(
+        q, key, n_sweeps=1, beta=0.4406868, bs=bs, backend="ref"), quads)
+    emit(f"kernel_ref_{size}", sec,
+         f"flips_per_ns={size * size / sec / 1e9:.4f}")
+
+
+def main():
+    run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

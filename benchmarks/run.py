@@ -1,0 +1,50 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig4       # one section
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+SECTIONS = ("fig4", "table1", "table2", "kernel", "roofline")
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    wanted = set(args) or set(SECTIONS)
+    rc = 0
+    for name in SECTIONS:
+        if name not in wanted:
+            continue
+        print(f"\n### {name} " + "#" * (60 - len(name)))
+        t0 = time.time()
+        try:
+            if name == "fig4":
+                from benchmarks import fig4_correctness
+                rc |= fig4_correctness.main()
+            elif name == "table1":
+                from benchmarks import table1_single_core
+                table1_single_core.run()
+            elif name == "table2":
+                from benchmarks import table2_scaling
+                table2_scaling.run()
+            elif name == "kernel":
+                from benchmarks import kernel_micro
+                kernel_micro.run()
+            elif name == "roofline":
+                from benchmarks import roofline
+                rc |= roofline.main()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"# section {name} FAILED: {type(e).__name__}: {e}")
+            rc = 1
+        print(f"# section {name} took {time.time() - t0:.1f}s")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

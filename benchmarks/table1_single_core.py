@@ -1,0 +1,66 @@
+"""Paper Table 1: single-core throughput (flips/ns) vs lattice size.
+
+The container has no TPU, so absolute flips/ns are host-CPU numbers — the
+meaningful outputs are (a) the *relative* scaling across lattice sizes (the
+paper's "larger lattices amortize better" effect), and (b) the projected
+TPU-v5e flips/ns derived from the dry-run roofline of the same compiled
+sweep (see EXPERIMENTS.md §Perf for the derivation).
+
+Sizes are scaled down 64x from the paper's (20x128)^2..(640x128)^2; pass
+--paper-scale on a real TPU host.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, time_fn
+
+
+def run(sizes_blocks=(2, 4, 8, 16), block_size=128, n_sweeps=5,
+        dtype="bfloat16", backend="xla"):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import lattice as L
+    from repro.core import sampler
+    from repro.kernels import ops as kops
+
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for blocks in sizes_blocks:
+        size = blocks * block_size
+        quads = sampler.init_state(key, size, size)
+        if backend == "xla":
+            cfg = sampler.ChainConfig(beta=0.4406868, n_sweeps=n_sweeps,
+                                      block_size=block_size, dtype=dtype,
+                                      prob_dtype="bfloat16")
+            sec = time_fn(lambda q: sampler.run_sweeps(q, key, cfg), quads)
+        else:
+            sec = time_fn(
+                lambda q: kops.run_sweeps(q, key, n_sweeps=n_sweeps,
+                                          beta=0.4406868, bs=block_size,
+                                          backend=backend), quads)
+        flips_ns = n_sweeps * size * size / (sec * 1e9)
+        rows.append((size, sec, flips_ns))
+        emit(f"table1_{backend}_{size}x{size}", sec / n_sweeps,
+             f"flips_per_ns={flips_ns:.4f}")
+    # the paper's effect: throughput rises with size then plateaus
+    small, large = rows[0][2], rows[-1][2]
+    emit("table1_scaling_ratio", 0.0,
+         f"large_over_small={large / max(small, 1e-12):.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="paper's real sizes (needs a TPU-class host)")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "ref"])
+    args = ap.parse_args()
+    sizes = (20, 40, 80, 160, 320, 640) if args.paper_scale else (2, 4, 8, 16)
+    run(sizes_blocks=sizes, backend=args.backend)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Multi-device Ising simulation (paper Table 2 pattern) on virtual devices.
+
+Spatial domain decomposition over a ("pod", "data", "model") mesh with halo
+exchange via lax.ppermute — the JAX analogue of the paper's
+collective_permute. On real hardware remove the XLA_FLAGS line and point
+jax.distributed at the pod slice.
+
+    python examples/multipod_ising.py --devices 8 --mesh 2,2,2 --sweeps 50
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--mesh", default="2,2,2",
+                    help="pod,data,model (product = --devices)")
+    ap.add_argument("--blocks", type=int, default=2,
+                    help="128x128 compact blocks per device per dim")
+    ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--sweeps", type=int, default=50)
+    ap.add_argument("--temperature-ratio", type=float, default=0.9,
+                    help="T / T_c")
+    args = ap.parse_args()
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import time
+
+    from repro.core import lattice as L
+    from repro.core import observables as obs
+    from repro.distributed import ising as dising
+    from repro.launch import mesh as mesh_lib
+
+    shape = tuple(int(x) for x in args.mesh.split(","))
+    axes = ("pod", "data", "model")[3 - len(shape):]
+    mesh = mesh_lib.make_mesh(shape, axes)
+    row_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    t = args.temperature_ratio * obs.critical_temperature()
+    cfg = dising.DistIsingConfig(beta=1.0 / t, block_size=args.block_size,
+                                 row_axes=row_axes, col_axes=("model",))
+    nrows = 1
+    for a in row_axes:
+        nrows *= mesh.shape[a]
+    ncols = mesh.shape["model"]
+    mr, mc = args.blocks * nrows, args.blocks * ncols
+    bs = args.block_size
+    h, w = 2 * mr * bs, 2 * mc * bs
+    print(f"mesh {dict(mesh.shape)}  global lattice {h}x{w} "
+          f"({h * w / 1e6:.2f}M spins)  T/Tc={args.temperature_ratio}")
+
+    key = jax.random.PRNGKey(0)
+    full = L.random_lattice(key, h, w, jnp.bfloat16)
+    quads = L.to_quads(full)
+    qb = jnp.stack([L.block(quads[i], bs) for i in range(4)])
+    qb = jax.device_put(qb, dising.lattice_sharding(mesh, cfg))
+
+    run = dising.make_run_sweeps_fn(mesh, cfg, n_sweeps=args.sweeps)
+    t0 = time.perf_counter()
+    out = run(qb, key)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+
+    m = float(jnp.mean(jax.device_get(out).astype(jnp.float32)))
+    flips_ns = args.sweeps * h * w / (dt * 1e9)
+    print(f"{args.sweeps} sweeps in {dt:.2f}s  "
+          f"({flips_ns:.4f} flips/ns across {args.devices} virtual devices)")
+    print(f"final magnetization {m:+.4f} "
+          f"(T<Tc: expect |m| ~ 0.7-1.0 after enough sweeps)")
+
+
+if __name__ == "__main__":
+    main()

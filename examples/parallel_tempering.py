@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Parallel tempering across a temperature ladder (beyond-paper MCMC).
+
+Replica exchange defeats critical slowing down near T_c: hot replicas
+decorrelate fast and tunnel configurations down the ladder.
+
+    PYTHONPATH=src python examples/parallel_tempering.py --size 32 \
+        --rounds 60 --replicas 6
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import observables as obs
+from repro.core import tempering as pt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=32)
+    ap.add_argument("--replicas", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--exchange-every", type=int, default=5)
+    ap.add_argument("--tmin", type=float, default=0.6, help="T/Tc coldest")
+    ap.add_argument("--tmax", type=float, default=1.6, help="T/Tc hottest")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    tc = obs.critical_temperature()
+    ratios = np.linspace(args.tmax, args.tmin, args.replicas)
+    betas = tuple(1.0 / (r * tc) for r in ratios)
+    cfg = pt.TemperingConfig(betas=betas, n_rounds=args.rounds,
+                             exchange_every=args.exchange_every,
+                             block_size=min(16, args.size // 2))
+
+    print(f"{args.replicas} replicas, T/Tc ladder "
+          f"{[f'{r:.2f}' for r in ratios]}")
+    final, ms, frac = pt.run_tempering(jax.random.PRNGKey(args.seed),
+                                       args.size, cfg)
+    print(f"swap fraction {frac:.2f}")
+    print(f"{'round':>6} | " + " ".join(f"T={r:4.2f}" for r in ratios))
+    m = np.asarray(ms)
+    for i in range(0, args.rounds, max(1, args.rounds // 10)):
+        print(f"{i:6d} | " + " ".join(f"{m[i, j]:6.3f}"
+                                      for j in range(args.replicas)))
+    print("\nExpected: cold replicas (right columns) order, hot stay ~0; "
+          "all replicas started HOT.")
+
+
+if __name__ == "__main__":
+    main()

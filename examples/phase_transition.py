@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Paper Fig. 4: Binder parameter U4(T) and magnetization m(T) across the
+phase transition, in bfloat16 vs float32.
+
+    PYTHONPATH=src python examples/phase_transition.py --size 64 \
+        --sweeps 2000 --burnin 500 --points 7
+
+At paper scale this runs 1M sweeps per point on lattices up to 4096^2; the
+defaults here finish on a laptop CPU in minutes and still show the crossing.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import observables as obs
+from repro.core import sampler
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=64)
+    ap.add_argument("--sweeps", type=int, default=1000)
+    ap.add_argument("--burnin", type=int, default=300)
+    ap.add_argument("--points", type=int, default=7)
+    ap.add_argument("--tmin", type=float, default=0.7, help="T/Tc lower end")
+    ap.add_argument("--tmax", type=float, default=1.3, help="T/Tc upper end")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    tc = obs.critical_temperature()
+    temps = np.linspace(args.tmin * tc, args.tmax * tc, args.points)
+
+    print(f"size={args.size}  sweeps={args.sweeps}  burnin={args.burnin}")
+    print(f"{'T/Tc':>7} | {'|m| bf16':>9} {'U4 bf16':>8} | "
+          f"{'|m| f32':>9} {'U4 f32':>8}")
+    key = jax.random.PRNGKey(args.seed)
+    for dtype_pair in [None]:
+        rows_bf16 = sampler.measure_curve(key, args.size, temps, args.sweeps,
+                                          args.burnin, dtype="bfloat16")
+        rows_f32 = sampler.measure_curve(key, args.size, temps, args.sweeps,
+                                         args.burnin, dtype="float32")
+    for rb, rf in zip(rows_bf16, rows_f32):
+        print(f"{rb['T'] / tc:7.3f} | {rb['m_abs']:9.4f} {rb['U4']:8.4f} | "
+              f"{rf['m_abs']:9.4f} {rf['U4']:8.4f}")
+    print("\nExpected: |m| -> 1 and U4 -> 2/3 below Tc; both drop sharply "
+          "above Tc.\nbf16 and f32 columns should agree to MC noise "
+          "(the paper's low-precision claim).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Post-SPMD HLO parsing: collective ops and their per-device byte volumes.
+
+``compiled.as_text()`` (the partitioned module) is the only place the real
+collective schedule is visible — ``lowered.as_text()`` still shows the
+unpartitioned program. We parse every op definition line, remember result
+shapes, and apply ring-algorithm cost models per collective kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# one shape literal: f32[128,64]  (layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# op definition: %name = <shape or tuple> opcode(
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+                     r"([\w\-]+)\((.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all shape literals in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:  # replica_groups=[G,N] — N participants per group
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        n = len([x for x in first.split(",") if x.strip() != ""])
+        return max(n, 1)
+    return default
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        """Bytes each device moves over the interconnect (ring algorithms)."""
+        n = max(self.group_size, 1)
+        if n == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * (n - 1) / n * self.result_bytes
+        if self.kind == "all-gather":
+            return (n - 1) / n * self.result_bytes
+        if self.kind == "reduce-scatter":
+            return (n - 1) / n * self.operand_bytes
+        if self.kind == "all-to-all":
+            return (n - 1) / n * self.operand_bytes
+        if self.kind == "collective-permute":
+            return float(self.operand_bytes)
+        return 0.0
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> list[Collective]:
+    """Scan the partitioned HLO for collective op definitions."""
+    shapes: dict[str, int] = {}
+    out: list[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, result_text, opcode, rest = m.groups()
+        result_bytes = _shape_bytes(result_text)
+        shapes[name] = result_bytes
+        base = opcode.rstrip("0123456789.")
+        # normalize fused/start variants: all-reduce-start, all-gather-done…
+        for kind in COLLECTIVE_KINDS:
+            if base == kind or base == kind + "-start":
+                # operand bytes: look up named operands in the args
+                operand_bytes = 0
+                for op_name in re.findall(r"%([\w.\-]+)", rest):
+                    operand_bytes += shapes.get(op_name, 0)
+                if operand_bytes == 0:
+                    operand_bytes = _shape_bytes(rest)
+                out.append(Collective(kind, result_bytes, operand_bytes,
+                                      _group_size(line, n_devices)))
+                break
+    return out
+
+
+def collective_summary(hlo_text: str, n_devices: int) -> dict:
+    colls = parse_collectives(hlo_text, n_devices)
+    by_kind: dict[str, float] = {}
+    for c in colls:
+        by_kind[c.kind] = by_kind.get(c.kind, 0.0) + c.wire_bytes
+    return {
+        "count": len(colls),
+        "wire_bytes_per_device": sum(c.wire_bytes for c in colls),
+        "by_kind": by_kind,
+    }

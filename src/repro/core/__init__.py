@@ -1,0 +1,18 @@
+"""Core: the paper's contribution — checkerboard Ising MCMC on MXU matmuls."""
+from repro.core.lattice import (  # noqa: F401
+    MXU_BLOCK, Q00, Q01, Q10, Q11, BLACK_QUADS, WHITE_QUADS,
+    random_lattice, cold_lattice, to_quads, from_quads, block, unblock,
+    kernel_naive, kernel_compact, color_mask,
+)
+from repro.core.checkerboard import (  # noqa: F401
+    acceptance, acceptance_table, nn_full, update_color_full, sweep_full,
+    update_naive, nn_black, nn_white, update_color_compact, sweep_compact,
+    quad_probs_from_full,
+)
+from repro.core.observables import (  # noqa: F401
+    magnetization, energy_per_spin, binder_parameter, critical_temperature,
+    chain_statistics,
+)
+from repro.core.sampler import (  # noqa: F401
+    ChainConfig, run_chain, run_sweeps, init_state, measure_curve,
+)

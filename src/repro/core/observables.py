@@ -1,0 +1,84 @@
+"""Observables for Ising chains: magnetization, energy, Binder parameter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lattice as L
+
+
+def magnetization(quads: jax.Array) -> jax.Array:
+    """Mean spin  m = (1/N) sum_i sigma_i  (computed in f32)."""
+    return jnp.mean(quads.astype(jnp.float32))
+
+
+def energy_per_spin(quads: jax.Array) -> jax.Array:
+    """E/N = -(1/N) sum_<ij> sigma_i sigma_j  (J=1, each bond counted once)."""
+    full = L.from_quads(quads).astype(jnp.float32)
+    right = jnp.roll(full, -1, 1)
+    down = jnp.roll(full, -1, 0)
+    return -jnp.mean(full * (right + down))
+
+
+def binder_parameter(m2: jax.Array, m4: jax.Array) -> jax.Array:
+    """U4 = 1 - <m^4> / (3 <m^2>^2)  (paper §4.1)."""
+    return 1.0 - m4 / (3.0 * m2 ** 2)
+
+
+def critical_temperature() -> float:
+    """Onsager: T_c = 2 / ln(1 + sqrt(2)) (k_B = J = 1)."""
+    import math
+    return 2.0 / math.log(1.0 + math.sqrt(2.0))
+
+
+def susceptibility(m_samples: jax.Array, beta: float, n_spins: int) -> float:
+    """chi = beta * N * (<m^2> - <|m|>^2) (per spin, |m| convention)."""
+    m = jnp.abs(m_samples.astype(jnp.float64))
+    return float(beta * n_spins * (jnp.mean(m ** 2) - jnp.mean(m) ** 2))
+
+
+def specific_heat(e_samples: jax.Array, beta: float, n_spins: int) -> float:
+    """C = beta^2 * N * (<E^2> - <E>^2) per spin (E is energy per spin)."""
+    e = e_samples.astype(jnp.float64)
+    return float(beta ** 2 * n_spins * (jnp.mean(e ** 2) - jnp.mean(e) ** 2))
+
+
+def autocorrelation_time(samples: jax.Array, max_lag: int = 0) -> float:
+    """Integrated autocorrelation time tau of a scalar chain: 1 + 2*sum
+    rho(t), summed until rho first drops below 0 (standard windowing)."""
+    x = jnp.asarray(samples, jnp.float64)
+    x = x - jnp.mean(x)
+    n = x.shape[0]
+    var = jnp.mean(x * x)
+    max_lag = max_lag or min(n // 4, 200)
+    tau = 1.0
+    for t in range(1, max_lag):
+        rho = float(jnp.mean(x[:-t] * x[t:]) / jnp.maximum(var, 1e-300))
+        if rho <= 0:
+            break
+        tau += 2.0 * rho
+    return tau
+
+
+def chain_statistics(m_samples: jax.Array, e_samples: jax.Array,
+                     burnin: int = 0, beta: float = 0.0,
+                     n_spins: int = 0) -> dict:
+    """Reduce per-sweep scalar samples to the paper's Fig.-4 quantities
+    (plus susceptibility / specific heat / tau when beta, n_spins given)."""
+    m = jnp.abs(m_samples[burnin:].astype(jnp.float64))
+    e = e_samples[burnin:].astype(jnp.float64)
+    m2 = jnp.mean(m ** 2)
+    m4 = jnp.mean(m ** 4)
+    out = {
+        "m_abs": float(jnp.mean(m)),
+        "m2": float(m2),
+        "m4": float(m4),
+        "U4": float(binder_parameter(m2, m4)),
+        "E": float(jnp.mean(e)),
+        "n_samples": int(m.shape[0]),
+    }
+    if beta and n_spins:
+        out["chi"] = susceptibility(m_samples[burnin:], beta, n_spins)
+        out["C"] = specific_heat(e_samples[burnin:], beta, n_spins)
+        out["tau_m"] = autocorrelation_time(m_samples[burnin:])
+    return out

@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Params and activations are annotated with *logical* axis names; rules map
+them to mesh axes. A dim is sharded only if its size divides the mesh-axis
+product **and** the mesh axes aren't already used by an earlier dim of the
+same tensor (verified: jax 0.8 rejects uneven input shardings, and a
+PartitionSpec may not repeat a mesh axis).
+
+Example: llama4's 40 q-heads don't divide the 16-way model axis, so the
+"heads" rule falls back to replicated for that tensor while its "ffn"/
+"experts" dims still shard — the engine resolves this per-tensor.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of candidate mesh-axis groups, tried in order.
+# Each candidate is a tuple of mesh axis names used together.
+DEFAULT_RULES: dict = {
+    "batch": (("pod", "data"), ("data",)),
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head": (),                      # head_dim: never sharded
+    "ffn": (("model",),),
+    "experts": (("model",),),
+    "embed": (),                     # sharded only under FSDP (see below)
+    "rnn": (("model",),),
+    "ssm_inner": (("model",),),
+    "ssm_heads": (("model",),),
+    "state": (),
+    "seq": (),                       # sequence kept local (halo-free archs)
+    "layers": (),                    # stacked-layer leading dim
+    None: (),
+}
+
+# Under FSDP the embed/replicated dims additionally shard over data.
+FSDP_RULES: dict = dict(DEFAULT_RULES)
+FSDP_RULES["embed"] = (("data",),)
+FSDP_RULES["ffn"] = (("model",), ("data",))
+FSDP_RULES["experts"] = (("model",), ("data",))
+
+
+def _mesh_axes_size(mesh: Mesh, axes: tuple) -> int:
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0
+        size *= mesh.shape[a]
+    return size
+
+
+def resolve_spec(mesh: Mesh, dims: tuple, shape: tuple,
+                 rules: Optional[dict] = None) -> P:
+    """Map logical dims of one tensor to a PartitionSpec.
+
+    dims: tuple of logical names (or None), len == tensor rank.
+    shape: concrete dim sizes (for divisibility checks).
+    """
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    out = []
+    for dim_name, size in zip(dims, shape):
+        assigned = None
+        for cand in rules.get(dim_name, ()):
+            axes_size = _mesh_axes_size(mesh, cand)
+            if axes_size <= 1:
+                continue
+            if any(a in used for a in cand):
+                continue
+            if size % axes_size != 0:
+                continue
+            assigned = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+            break
+        out.append(assigned)
+    return P(*out)
+
+
+def resolve_tree(mesh: Mesh, spec_tree, param_tree, rules=None):
+    """specs (logical) + params -> NamedSharding tree."""
+    def one(dims, leaf):
+        if dims is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, resolve_spec(mesh, tuple(dims),
+                                                jnp.shape(leaf), rules))
+    return jax.tree.map(one, spec_tree, param_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+# ---------------------------------------------------------------------------
+# trace-time activation sharding hints
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """While active, :func:`shard_hint` emits with_sharding_constraint."""
+    prev = getattr(_CTX, "cfg", None)
+    _CTX.cfg = (mesh, rules or DEFAULT_RULES) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _CTX.cfg = prev
+
+
+def shard_hint(x: jax.Array, dims: tuple) -> jax.Array:
+    """Annotate an activation with logical dims; no-op outside a mesh ctx."""
+    cfg = getattr(_CTX, "cfg", None)
+    if cfg is None:
+        return x
+    mesh, rules = cfg
+    spec = resolve_spec(mesh, dims, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh_and_rules():
+    """The (mesh, rules) of the enclosing activation_sharding context, or
+    (None, None) — lets layers opt into explicit shard_map implementations
+    (e.g. the expert-parallel MoE) when a mesh is available."""
+    cfg = getattr(_CTX, "cfg", None)
+    if cfg is None:
+        return None, None
+    return cfg

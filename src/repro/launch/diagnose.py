@@ -1,0 +1,93 @@
+"""Perf diagnostics: compile one dry-run cell and print where the bytes,
+flops and wire traffic go (the §Perf hypothesis tool).
+
+    PYTHONPATH=src python -m repro.launch.diagnose --arch kimi-k2-1t-a32b \
+        --shape train_4k --top 25
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--pipeline", default="paper",
+                    help="ising cells: paper | opt")
+    ap.add_argument("--bits", default="uint32", help="ising: uint32|uint16")
+    ap.add_argument("--rng", default="threefry", help="ising: threefry|rbg")
+    ap.add_argument("--dump-hlo", default="",
+                    help="write partitioned HLO text here")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import hlo_cost
+    from repro.analysis import roofline as RL
+    from repro.configs.base import LM_SHAPES
+    from repro.launch import dryrun_lib as lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.distributed import sharding as SH
+    from repro.configs import get_config, get_ising_config
+    import jax
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    n_dev = mesh.devices.size
+
+    if args.arch.startswith("ising"):
+        icfg = get_ising_config(args.arch)
+        fn, cell_args, out_sh, rules = lib.build_ising_cell(
+            icfg, mesh, pipeline=args.pipeline, bits_dtype=args.bits,
+            rng=args.rng)
+        jitted = fn
+    else:
+        cfg = get_config(args.arch)
+        shape = LM_SHAPES[args.shape]
+        builder = {"train": lib.build_train_cell,
+                   "prefill": lib.build_prefill_cell,
+                   "decode": lib.build_decode_cell}[shape.kind]
+        if shape.kind == "train":
+            fn, cell_args, out_sh, rules = builder(
+                cfg, shape, mesh, args.microbatches or None)
+        else:
+            fn, cell_args, out_sh, rules = builder(cfg, shape, mesh)
+        jitted = (jax.jit(fn, out_shardings=out_sh) if out_sh is not None
+                  else jax.jit(fn))
+
+    ctx = (SH.activation_sharding(mesh, rules) if rules is not None
+           else SH.activation_sharding(None))
+    with ctx:
+        compiled = jitted.lower(*cell_args).compile()
+    text = compiled.as_text()
+    if args.dump_hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(text)
+        print(f"# HLO written to {args.dump_hlo} ({len(text)} chars)")
+
+    cm = hlo_cost.CostModel(text, n_dev)
+    total = cm.total()
+    print(f"# totals: flops={total.flops:.3e} bytes={total.bytes:.3e} "
+          f"wire={total.wire_bytes:.3e}")
+    print(f"# roofline: compute={total.flops / RL.PEAK_FLOPS:.3f}s "
+          f"memory={total.bytes / RL.HBM_BW:.3f}s "
+          f"collective={total.wire_bytes / RL.ICI_BW:.3f}s")
+    print("# collectives by kind:",
+          json.dumps({k: f"{v:.3e}" for k, v in total.coll_by_kind.items()}))
+    print(f"\n# top {args.top} ops by HBM bytes "
+          f"(count = executions incl. loop trips):")
+    print(f"{'op':22s} {'bytes':>12s} {'flops':>12s} {'wire':>12s} "
+          f"{'count':>8s}  shape")
+    for row in cm.breakdown(args.top):
+        print(f"{row['op']:22s} {row['bytes']:12.3e} {row['flops']:12.3e} "
+              f"{row['wire']:12.3e} {row['count']:8.0f}  {row['shape'][:70]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

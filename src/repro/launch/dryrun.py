@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing module: jax locks the device count at
+#   first backend init. 512 placeholder host devices let jax.make_mesh build
+#   the production (16,16) and (2,16,16) meshes on this CPU-only container.
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import sys       # noqa: E402
+
+from repro.configs.base import LM_SHAPES  # noqa: E402
+from repro.launch import dryrun_lib as lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every "
+                    "(arch x shape x mesh) cell.")
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'ising-*', or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--out", default="", help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod-16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pods-2x16x16", make_production_mesh(multi_pod=True)))
+
+    if args.arch == "all":
+        cells = lib.default_cells()
+    else:
+        shapes = (list(LM_SHAPES) if args.shape == "all" else [args.shape]) \
+            if not args.arch.startswith("ising") else ["sweep"]
+        cells = [(args.arch, s) for s in shapes]
+
+    failures = 0
+    out_f = open(args.out, "a") if args.out else None
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            rec = lib.run_cell(arch, shape, mesh, mesh_name,
+                               args.microbatches or None)
+            status = ("SKIP" if rec.get("skipped")
+                      else "OK" if rec["ok"] else "FAIL")
+            line = json.dumps(rec)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+            summary = {k: rec.get(k) for k in
+                       ("arch", "shape", "mesh", "compile_s")}
+            if rec.get("roofline"):
+                summary["dominant"] = rec["roofline"]["dominant"]
+            print(f"[{status}] {summary}")
+            if not rec["ok"]:
+                print(rec.get("error"), file=sys.stderr)
+                failures += 1
+    if out_f:
+        out_f.close()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

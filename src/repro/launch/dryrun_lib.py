@@ -1,0 +1,255 @@
+"""Dry-run machinery: lower + compile every (arch x shape x mesh) cell with
+production shardings, then extract memory / cost / collective analysis.
+
+No arrays are ever allocated: states and batches are ShapeDtypeStructs with
+NamedShardings attached. Importing this module does NOT set XLA flags — the
+``repro.launch.dryrun`` entry point does that (512 host devices); tests
+import this library under their own (smaller) device counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as RL
+from repro.configs import get_config, get_ising_config
+from repro.configs.base import IsingConfig, LM_SHAPES, ModelConfig, ShapeConfig
+from repro.distributed import ising as dising
+from repro.distributed import sharding as SH
+from repro.launch import mesh as mesh_lib
+from repro.models import model as M
+from repro.models import transformer
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+# per-arch gradient-accumulation defaults for train_4k. Memory-driven
+# upper bound, collective-driven lower bound: every microbatch re-gathers
+# FSDP params and re-syncs grads, so fewer microbatches = less wire
+# (§Perf kimi iterations 2-3 measured the scan 16/8/4).
+MICROBATCHES = {
+    "kimi-k2-1t-a32b": 8, "llama4-maverick-400b-a17b": 8,
+    "command-r-35b": 16, "nemotron-4-15b": 8, "qwen2-vl-7b": 1,
+    "qwen3-4b": 8, "recurrentgemma-2b": 4, "qwen3-0.6b": 4,
+    "musicgen-medium": 1, "mamba2-780m": 4,
+    # musicgen/qwen2-vl: microbatches=1 so the global batch (256) shards
+    # over (data x model) = 256 — with any accumulation the per-microbatch
+    # batch no longer divides the mesh and attention re-replicates
+    # (§Perf musicgen iteration 3).
+}
+
+
+def rules_for(cfg: ModelConfig) -> dict:
+    rules = dict(SH.FSDP_RULES if cfg.fsdp else SH.DEFAULT_RULES)
+    if cfg.batch_over_model:
+        rules["batch"] = (("pod", "data", "model"), ("data", "model"),
+                          ("pod", "data"), ("data",))
+    return rules
+
+
+def _attach(struct_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, sharding_tree)
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: OPT.OptimizerConfig):
+    """(state ShapeDtypeStruct tree, param logical-spec tree) — no allocation."""
+    box = {}
+
+    def go(key):
+        params, specs = transformer.init_model(key, cfg)
+        box["specs"] = specs          # captured at trace time
+        opt_state = OPT.init_fn(opt_cfg.kind)(params, opt_cfg)
+        return {"params": params, "opt": opt_state,
+                "step": jnp.zeros((), jnp.int32)}
+
+    struct = jax.eval_shape(go, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return struct, box["specs"]
+
+
+def abstract_params(cfg: ModelConfig):
+    box = {}
+
+    def go(key):
+        params, specs = transformer.init_model(key, cfg)
+        box["specs"] = specs
+        return params
+
+    struct = jax.eval_shape(go, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return struct, box["specs"]
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh, rules) -> dict:
+    specs = M.input_specs(cfg, shape)
+    dims = M.batch_logical_dims(cfg, shape)
+    shardings = {
+        k: NamedSharding(mesh, SH.resolve_spec(mesh, d, specs[k].shape, rules))
+        if d is not None else NamedSharding(mesh, P())
+        for k, d in dims.items()}
+    return {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=shardings[k])
+            for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# cell builders: return (fn, args_sds, out_shardings|None)
+# ---------------------------------------------------------------------------
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     microbatches: Optional[int] = None):
+    rules = rules_for(cfg)
+    opt_cfg = OPT.OptimizerConfig(kind=cfg.optimizer)
+    micro = microbatches or MICROBATCHES.get(cfg.name, 4)
+    state_struct, param_specs = abstract_train_state(cfg, opt_cfg)
+    state_dims = TS.state_logical_dims(cfg, opt_cfg, param_specs,
+                                       state_struct["params"])
+    state_sh = SH.resolve_tree(mesh, state_dims, state_struct, rules)
+    state_in = _attach(state_struct, state_sh)
+    batch_in = batch_sds(cfg, shape, mesh, rules)
+    fn = TS.make_train_step(cfg, opt_cfg, microbatches=micro)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P()),
+                  "step": NamedSharding(mesh, P())}
+    return fn, (state_in, batch_in), (state_sh, metrics_sh), rules
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = rules_for(cfg)
+    params_struct, param_specs = abstract_params(cfg)
+    params_sh = SH.resolve_tree(mesh, param_specs, params_struct, rules)
+    params_in = _attach(params_struct, params_sh)
+    batch_in = batch_sds(cfg, shape, mesh, rules)
+    fn = M.make_prefill(cfg)
+    return fn, (params_in, batch_in), None, rules
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    rules = rules_for(cfg)
+    params_struct, param_specs = abstract_params(cfg)
+    params_sh = SH.resolve_tree(mesh, param_specs, params_struct, rules)
+    params_in = _attach(params_struct, params_sh)
+    states_struct, state_dims = M.decode_state_specs(cfg, shape)
+    states_sh = SH.resolve_tree(mesh, state_dims, states_struct, rules)
+    states_in = _attach(states_struct, states_sh)
+    batch_in = batch_sds(cfg, shape, mesh, rules)
+    fn = M.make_decode_step(cfg)
+    return fn, (params_in, states_in, batch_in), (None, states_sh), rules
+
+
+def build_ising_cell(icfg: IsingConfig, mesh, pipeline: str = "paper",
+                     bits_dtype: str = "uint32", rng: str = "threefry"):
+    """The paper's own architecture: one compiled multi-device sweep step."""
+    row_axes = mesh_lib.data_axes(mesh)
+    dcfg = dising.DistIsingConfig(
+        beta=icfg.beta, block_size=icfg.block_size, row_axes=row_axes,
+        col_axes=("model",), backend="xla", prob_dtype="bfloat16",
+        pipeline=pipeline, bits_dtype=bits_dtype, rng=rng)
+    nrows = 1
+    for a in row_axes:
+        nrows *= mesh.shape[a]
+    ncols = mesh.shape["model"]
+    mr, mc = icfg.height_blocks * nrows, icfg.width_blocks * ncols
+    bs = icfg.block_size
+    qsharding = NamedSharding(mesh, P(row_axes, ("model",), None, None))
+    quad = jax.ShapeDtypeStruct((mr, mc, bs, bs), jnp.dtype(icfg.dtype),
+                                sharding=qsharding)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                               sharding=NamedSharding(mesh, P()))
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    fn = dising.make_sweep_tuple_fn(mesh, dcfg)  # already jitted shard_map
+    return fn, (quad, quad, quad, quad, key, step), None, None
+
+
+# ---------------------------------------------------------------------------
+# run one cell
+# ---------------------------------------------------------------------------
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 512k dense-cache decode excluded by "
+                "design (see DESIGN.md §7)")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             microbatches: Optional[int] = None) -> dict:
+    """Lower + compile one cell; returns a JSON-able record."""
+    n_dev = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "n_devices": int(n_dev), "ok": False}
+    t0 = time.time()
+    try:
+        if arch.startswith("ising"):
+            icfg = get_ising_config(arch)
+            # production default = the §Perf-optimized pipeline; the
+            # paper-faithful baseline is measured via diagnose --pipeline
+            # paper and preserved in results/dryrun_baseline.jsonl.
+            fn, args, out_sh, rules = build_ising_cell(
+                icfg, mesh, pipeline="opt", bits_dtype="uint16", rng="rbg")
+            model_flops = RL.ising_model_flops(
+                icfg.height_blocks, icfg.width_blocks, icfg.block_size, n_dev)
+            jitted = fn  # make_sweep_fn returns a jitted callable
+        else:
+            cfg = get_config(arch)
+            shape = LM_SHAPES[shape_name]
+            reason = skip_reason(cfg, shape)
+            if reason:
+                rec.update(ok=True, skipped=True, reason=reason)
+                return rec
+            builder = {"train": build_train_cell, "prefill": build_prefill_cell,
+                       "decode": build_decode_cell}[shape.kind]
+            if shape.kind == "train":
+                fn, args, out_sh, rules = builder(cfg, shape, mesh,
+                                                  microbatches)
+            else:
+                fn, args, out_sh, rules = builder(cfg, shape, mesh)
+            model_flops = RL.lm_model_flops(cfg, shape)
+            jitted = (jax.jit(fn, out_shardings=out_sh) if out_sh is not None
+                      else jax.jit(fn))
+
+        ctx = (SH.activation_sharding(mesh, rules) if rules is not None
+               else SH.activation_sharding(None))
+        with ctx:
+            lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        rl = RL.from_compiled(compiled, n_dev, model_flops)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory={
+                "argument_gb": mem.argument_size_in_bytes / 1e9,
+                "output_gb": mem.output_size_in_bytes / 1e9,
+                "temp_gb": mem.temp_size_in_bytes / 1e9,
+                "alias_gb": mem.alias_size_in_bytes / 1e9,
+                "peak_gb": (mem.argument_size_in_bytes
+                            + mem.output_size_in_bytes
+                            + mem.temp_size_in_bytes
+                            - mem.alias_size_in_bytes) / 1e9,
+            },
+            roofline=rl.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a result
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def default_cells(include_ising: bool = True) -> list[tuple[str, str]]:
+    from repro.configs import list_configs
+    cells = [(a, s) for a in list_configs() for s in LM_SHAPES]
+    if include_ising:
+        cells += [("ising-640x128", "sweep"), ("ising-pod", "sweep")]
+    return cells

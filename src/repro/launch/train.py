@@ -1,0 +1,134 @@
+"""Production training launcher: any assigned arch on a jax Mesh with the
+full sharding engine, microbatched train step, fault-tolerant loop.
+
+On a real fleet this runs under ``jax.distributed.initialize()`` with one
+process per host; here it runs single-process (optionally with virtual
+devices for rehearsal):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --devices 8 --mesh 2,4 --steps 20 --batch 16 --seq 128 \
+        --scale 0.1 --ckpt-dir /tmp/ck
+
+``--scale`` reduces width/depth proportionally (1.0 = the published config —
+only sensible on real TPUs).
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+
+def _reduce(cfg, scale: float):
+    if scale >= 1.0:
+        return cfg
+    def r(x, q=64):
+        return max(q, int(x * scale) // q * q)
+    kw = dict(
+        n_layers=max(2, int(cfg.n_layers * scale)),
+        d_model=r(cfg.d_model),
+        vocab_size=min(cfg.vocab_size, 4096), vocab_pad_multiple=64)
+    if cfg.family != "ssm":
+        heads = max(2, int(cfg.n_heads * scale))
+        kw.update(n_heads=heads, n_kv_heads=max(1, min(cfg.n_kv_heads, heads)),
+                  d_ff=r(cfg.d_ff or 256), head_dim=max(16, r(cfg.d_model) // heads))
+    if cfg.n_experts:
+        n_e = max(4, int(cfg.n_experts * scale))
+        kw.update(n_experts=n_e, moe_d_ff=r(cfg.moe_d_ff),
+                  experts_per_token=min(cfg.experts_per_token, n_e))
+    if cfg.window:
+        kw.update(window=min(cfg.window, 512))
+    return dataclasses.replace(cfg, **kw)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="virtual device count (0 = use real devices)")
+    ap.add_argument("--mesh", default="",
+                    help="comma mesh shape, e.g. 2,4 or 2,16,16; "
+                         "axes are (data, model) or (pod, data, model)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data import synthetic as syn
+    from repro.distributed import sharding as SH
+    from repro.launch import dryrun_lib as lib
+    from repro.launch import mesh as mesh_lib
+    from repro.train import optimizer as OPT
+    from repro.train import train_step as TS
+    from repro.train.trainer import Trainer, TrainLoopConfig
+    from repro.models import transformer
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("pod", "data", "model")[3 - len(shape):]
+        mesh = mesh_lib.make_mesh(shape, axes)
+    else:
+        n = len(jax.devices())
+        mesh = mesh_lib.make_mesh((n, 1), ("data", "model"))
+
+    cfg = _reduce(get_config(args.arch), args.scale)
+    shape_cfg = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                            kind="train")
+    rules = lib.rules_for(cfg)
+    ocfg = OPT.OptimizerConfig(kind=cfg.optimizer)
+    print(f"[launch] {cfg.name} scale={args.scale} "
+          f"params~{cfg.param_count()/1e6:.1f}M mesh={dict(mesh.shape)}")
+
+    # init sharded state: eval_shape -> shardings -> jit'd init with
+    # out_shardings so parameters materialize directly on the mesh.
+    state_struct, param_specs = lib.abstract_train_state(cfg, ocfg)
+    state_dims = TS.state_logical_dims(cfg, ocfg, param_specs,
+                                       state_struct["params"])
+    state_sh = SH.resolve_tree(mesh, state_dims, state_struct, rules)
+
+    def init(key):
+        params, _ = transformer.init_model(key, cfg)
+        import jax.numpy as jnp
+        return {"params": params,
+                "opt": OPT.init_fn(ocfg.kind)(params, ocfg),
+                "step": jnp.zeros((), jnp.int32)}
+
+    with SH.activation_sharding(mesh, rules):
+        state = jax.jit(init, out_shardings=state_sh)(
+            jax.random.PRNGKey(args.seed))
+
+        step_fn = TS.make_train_step(cfg, ocfg, args.microbatches)
+        batch_sds = lib.batch_sds(cfg, shape_cfg, mesh, rules)
+        batch_shardings = {k: v.sharding for k, v in batch_sds.items()}
+        jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_shardings),
+                         out_shardings=None, donate_argnums=(0,))
+
+        tcfg = TrainLoopConfig(total_steps=args.steps,
+                               ckpt_dir=args.ckpt_dir or None,
+                               ckpt_every=args.ckpt_every,
+                               log_every=max(1, args.steps // 20))
+        trainer = Trainer(jitted, state, None, tcfg,
+                          state_shardings=state_sh)
+        trainer.install_signal_handler()
+        start = trainer.maybe_restore() if args.ckpt_dir else 0
+        trainer.data_iter = syn.iterate(shape_cfg, cfg, batch_shardings,
+                                        start_step=start)
+        result = trainer.run()
+    print(f"[launch] done: {result['steps_run']} steps, "
+          f"final loss {result['losses'][-1] if result['losses'] else None}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,530 @@
+"""Building blocks for the model zoo: norms, rotary embeddings, GQA attention
+(flash-style chunked softmax), sliding-window attention, KV caches, MLPs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every ``init_*``
+returns ``(params, specs)`` where ``specs`` mirrors the param tree with
+tuples of *logical* axis names consumed by ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, shape, dtype, in_axes=(0,)):
+    """Truncated-normal-ish fan-in init."""
+    fan_in = 1
+    for a in in_axes:
+        fan_in *= shape[a]
+    return _normal(key, shape, dtype, 1.0 / math.sqrt(fan_in))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                 sections: tuple = ()) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables [..., head_dim/2].
+
+    positions: [...]. For M-RoPE, positions is [..., 3] (temporal, h, w) and
+    ``sections`` splits head_dim/2 across the three channels
+    (Qwen2-VL §2.1; text tokens carry identical coords in all channels,
+    reducing M-RoPE to standard RoPE).
+    """
+    inv = _inv_freq(head_dim, theta)
+    if sections:
+        assert positions.shape[-1] == len(sections)
+        parts = []
+        start = 0
+        for ch, sec in enumerate(sections):
+            ang = positions[..., ch, None].astype(jnp.float32) \
+                * inv[start:start + sec]
+            parts.append(ang)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; cos/sin: [B, S, hd/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention — flash-style chunked GQA (never materializes [S, S])
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(qi, ki, q_chunk: int, kv_chunk: int, causal: bool,
+                window: int):
+    qpos = qi * q_chunk + jnp.arange(q_chunk)
+    kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+    ok = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    return ok
+
+
+def _chunk_live(qi, ki, q_chunk: int, kv_chunk: int, causal: bool,
+                window: int):
+    """False iff the (qi, ki) chunk pair is FULLY masked — lets the scans
+    skip ~half of all chunks for causal attention and all out-of-window
+    chunks for sliding-window layers (§Perf musicgen iteration 2)."""
+    live = jnp.asarray(True)
+    if causal:
+        live &= ki * kv_chunk <= qi * q_chunk + (q_chunk - 1)
+    if window:
+        live &= (ki + 1) * kv_chunk - 1 > qi * q_chunk - window
+    return live
+
+
+def _flash_fwd_impl(q, k, v, causal: bool, window: int, q_chunk: int,
+                    kv_chunk: int):
+    """Streaming softmax forward. Returns (out [B,S,H,hd],
+    lse [B,KV,G,S] log-sum-exp rows for the backward)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, nq, q_chunk, kv, g, hd)
+    kr = k.reshape(b, nk, kv_chunk, kv, hd)
+    vr = v.reshape(b, nk, kv_chunk, kv, hd)
+
+    def q_block(carry, qi):
+        qb = qr[:, qi]                      # [B, qc, KV, G, hd]
+
+        def kv_block(acc, ki):
+            def live(acc):
+                m_prev, l_prev, o_prev = acc
+                kb = kr[:, ki]              # [B, kc, KV, hd]
+                vb = vr[:, ki]
+                sc = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                                preferred_element_type=jnp.float32) * scale
+                ok = _chunk_mask(qi, ki, q_chunk, kv_chunk, causal, window)
+                sc = jnp.where(ok, sc, NEG_INF)
+                m_new = jnp.maximum(m_prev, sc.max(-1))
+                p = jnp.exp(sc - m_new[..., None])
+                corr = jnp.exp(m_prev - m_new)
+                l_new = l_prev * corr + p.sum(-1)
+                pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb,
+                                preferred_element_type=jnp.float32)
+                o_new = o_prev * corr[..., None] + pv
+                return m_new, l_new, o_new
+
+            acc = jax.lax.cond(
+                _chunk_live(qi, ki, q_chunk, kv_chunk, causal, window),
+                live, lambda a: a, acc)
+            return acc, None
+
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        o0 = jnp.zeros((b, kv, g, q_chunk, hd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), jnp.arange(nk))
+        l_safe = jnp.maximum(l, 1e-30)
+        o = o / l_safe[..., None]
+        lse = m + jnp.log(l_safe)           # [B, KV, G, qc]
+        o = o.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, hd)
+        return carry, (o.astype(q.dtype), lse)
+
+    _, (blocks, lses) = jax.lax.scan(q_block, None, jnp.arange(nq))
+    out = blocks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    # lses: [nq, B, KV, G, qc] -> [B, KV, G, S]
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kv, g, s)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, causal: bool, window: int,
+                    q_chunk: int, kv_chunk: int):
+    """FlashAttention-2-style backward: recompute scores per chunk from the
+    saved LSE — nothing quadratic ever hits HBM. Two passes: dq over q
+    chunks, (dk, dv) over kv chunks (§Perf musicgen iteration 1: the
+    default scan-VJP stacked every [qc, kc] score chunk into HBM)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(b, nq, q_chunk, kv, g, hd)
+    kr = k.reshape(b, nk, kv_chunk, kv, hd)
+    vr = v.reshape(b, nk, kv_chunk, kv, hd)
+    dor = do.reshape(b, nq, q_chunk, kv, g, hd)
+    lser = lse.reshape(b, kv, g, nq, q_chunk)
+    # D_i = rowsum(do * o)  [B, KV, G, nq, qc]
+    dmat = jnp.einsum("bnqkgd,bnqkgd->bkgnq",
+                      dor.astype(jnp.float32),
+                      out.reshape(b, nq, q_chunk, kv, g, hd)
+                      .astype(jnp.float32))
+
+    def p_chunk(qi, ki, qb, kb):
+        sc = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb,
+                        preferred_element_type=jnp.float32) * scale
+        ok = _chunk_mask(qi, ki, q_chunk, kv_chunk, causal, window)
+        sc = jnp.where(ok, sc, NEG_INF)
+        return jnp.exp(sc - lser[:, :, :, qi][..., None])  # [B,KV,G,qc,kc]
+
+    # pass 1: dq, streaming over kv chunks per q chunk
+    def dq_block(_, qi):
+        qb, dob = qr[:, qi], dor[:, qi]
+        di = dmat[:, :, :, qi]
+
+        def inner(acc, ki):
+            def live(acc):
+                kb, vb = kr[:, ki], vr[:, ki]
+                p = p_chunk(qi, ki, qb, kb)
+                dp = jnp.einsum("bqkgd,btkd->bkgqt", dob.astype(jnp.float32),
+                                vb.astype(jnp.float32))
+                ds = p * (dp - di[..., None]) * scale
+                dq_c = jnp.einsum("bkgqt,btkd->bqkgd", ds,
+                                  kb.astype(jnp.float32))
+                return acc + dq_c
+
+            acc = jax.lax.cond(
+                _chunk_live(qi, ki, q_chunk, kv_chunk, causal, window),
+                live, lambda a: a, acc)
+            return acc, None
+
+        dq0 = jnp.zeros((b, q_chunk, kv, g, hd), jnp.float32)
+        dqb, _ = jax.lax.scan(inner, dq0, jnp.arange(nk))
+        return None, dqb.astype(q.dtype)
+
+    _, dq_blocks = jax.lax.scan(dq_block, None, jnp.arange(nq))
+    dq = dq_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+
+    # pass 2: dk, dv, streaming over q chunks per kv chunk
+    def dkv_block(_, ki):
+        kb, vb = kr[:, ki], vr[:, ki]
+
+        def inner(acc, qi):
+            def live(acc):
+                dk_a, dv_a = acc
+                qb, dob = qr[:, qi], dor[:, qi]
+                p = p_chunk(qi, ki, qb, kb)
+                dv_c = jnp.einsum("bkgqt,bqkgd->btkd", p,
+                                  dob.astype(jnp.float32))
+                dp = jnp.einsum("bqkgd,btkd->bkgqt",
+                                dob.astype(jnp.float32),
+                                vb.astype(jnp.float32))
+                ds = p * (dp - dmat[:, :, :, qi][..., None]) * scale
+                dk_c = jnp.einsum("bkgqt,bqkgd->btkd", ds,
+                                  qb.astype(jnp.float32))
+                return dk_a + dk_c, dv_a + dv_c
+
+            acc = jax.lax.cond(
+                _chunk_live(qi, ki, q_chunk, kv_chunk, causal, window),
+                live, lambda a: a, acc)
+            return acc, None
+
+        z = jnp.zeros((b, kv_chunk, kv, hd), jnp.float32)
+        (dkb, dvb), _ = jax.lax.scan(inner, (z, z), jnp.arange(nq))
+        return None, (dkb.astype(k.dtype), dvb.astype(v.dtype))
+
+    _, (dk_blocks, dv_blocks) = jax.lax.scan(dkv_block, None, jnp.arange(nk))
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(b, t, kv, hd)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(b, t, kv, hd)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, do, causal, window,
+                           q_chunk, kv_chunk)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention with a flash-style custom VJP.
+
+    q: [B, S, H, hd]; k, v: [B, T, KV, hd]; H % KV == 0. Returns [B, S, H, hd].
+    window > 0 limits attention to the trailing ``window`` keys ('l' layers).
+    """
+    s, t = q.shape[1], k.shape[1]
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    assert s % q_chunk == 0 and t % kv_chunk == 0, (s, t, q_chunk, kv_chunk)
+    return _flash(q, k, v, causal, window, q_chunk, kv_chunk)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0,
+                     layout: str = "btkh") -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, hd]; caches: [B, T, KV, hd] ("btkh") or [B, KV, T, hd]
+    ("bkth" — dot-native: the contraction needs no transposed copy of the
+    cache). pos: scalar index of the new token. For window>0 the cache is a
+    ring buffer of size ``window`` and validity is derived from pos.
+    """
+    b, _, h, hd = q.shape
+    if layout == "bkth":
+        kv, t = k_cache.shape[1], k_cache.shape[2]
+    else:
+        t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qr = q.reshape(b, kv, g, hd)
+    eq_k = "bkgd,bktd->bkgt" if layout == "bkth" else "bkgd,btkd->bkgt"
+    eq_v = "bkgt,bktd->bkgd" if layout == "bkth" else "bkgt,btkd->bkgd"
+    sc = jnp.einsum(eq_k, qr, k_cache,
+                    preferred_element_type=jnp.float32) / math.sqrt(hd)
+    idx = jnp.arange(t)
+    if window:
+        valid = (idx < jnp.minimum(pos + 1, t))
+    else:
+        valid = idx <= pos
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum(eq_v, p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def cache_update(cache: jax.Array, new: jax.Array, pos: jax.Array,
+                 window: int = 0, layout: str = "btkh") -> jax.Array:
+    """Write [B, 1, KV, hd] into the cache at pos (mod window if ring)."""
+    slot = jnp.where(window, pos % jnp.maximum(window, 1), pos)
+    if layout == "bkth":
+        new_t = new.transpose(0, 2, 1, 3)   # [B, KV, 1, hd]
+        return jax.lax.dynamic_update_slice(
+            cache, new_t.astype(cache.dtype), (0, 0, slot, 0))
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (0, slot, 0, 0))
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg) -> tuple[dict, dict]:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], (d, h, hd), dt),
+        "wk": dense_init(ks[1], (d, kvh, hd), dt),
+        "wv": dense_init(ks[2], (d, kvh, hd), dt),
+        "wo": dense_init(ks[3], (h, hd, d), dt, in_axes=(0, 1)),
+    }
+    specs = {
+        "wq": ("embed", "heads", "head"),
+        "wk": ("embed", "kv_heads", "head"),
+        "wv": ("embed", "kv_heads", "head"),
+        "wo": ("heads", "head", "embed"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), dt)
+        params["k_norm"] = jnp.ones((hd,), dt)
+        specs["q_norm"] = ("head",)
+        specs["k_norm"] = ("head",)
+    if cfg.attn_bias:
+        params["bq"] = jnp.zeros((h, hd), dt)
+        params["bk"] = jnp.zeros((kvh, hd), dt)
+        params["bv"] = jnp.zeros((kvh, hd), dt)
+        specs["bq"] = ("heads", "head")
+        specs["bk"] = ("kv_heads", "head")
+        specs["bv"] = ("kv_heads", "head")
+    return params, specs
+
+
+def _qkv(p, cfg, x, cos, sin):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_style != "none":
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_forward(p: dict, cfg, x: jax.Array, cos, sin,
+                      window: int = 0) -> jax.Array:
+    """Training/prefill attention over [B, S, d]."""
+    q, k, v = _qkv(p, cfg, x, cos, sin)
+    o = flash_attention(q, k, v, causal=True, window=window)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_prefill(p: dict, cfg, x: jax.Array, cos, sin, window: int = 0,
+                      max_len: int = 0):
+    """Like forward but also returns a decode-ready cache.
+
+    Non-windowed: the cache is zero-padded out to ``max_len`` so decode can
+    append at pos >= s (validity masking hides the padding). Windowed: the
+    cache is the last ``window`` keys ROLLED so token p sits at ring slot
+    p % window — the invariant decode's ``pos % window`` writes rely on.
+    """
+    s = x.shape[1]
+    q, k, v = _qkv(p, cfg, x, cos, sin)
+    o = flash_attention(q, k, v, causal=True, window=window)
+    if window:
+        if s >= window:
+            k, v = k[:, -window:], v[:, -window:]
+            shift = s % window      # roll right: slot of the oldest kept key
+            k = jnp.roll(k, shift, axis=1)
+            v = jnp.roll(v, shift, axis=1)
+        else:  # partial ring: token p already at slot p; pad to window
+            pad = ((0, 0), (0, window - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    elif max_len and max_len > s:
+        pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    if cfg.cache_layout == "bkth":
+        k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def attention_decode(p: dict, cfg, x: jax.Array, cache: tuple, pos, cos, sin,
+                     window: int = 0):
+    """x: [B, 1, d]; cache: (k, v) in cfg.cache_layout. Returns (out, cache)."""
+    q, k_new, v_new = _qkv(p, cfg, x, cos, sin)
+    k_cache, v_cache = cache
+    lay = cfg.cache_layout
+    k_cache = cache_update(k_cache, k_new, pos, window, lay)
+    v_cache = cache_update(v_cache, v_new, pos, window, lay)
+    o = decode_attention(q, k_cache, v_cache, pos, window=window, layout=lay)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff: int = 0) -> tuple[dict, dict]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    gated = cfg.activation in ("swiglu", "geglu")
+    params = {"wi": dense_init(ks[0], (d, ff), dt),
+              "wo": dense_init(ks[1], (ff, d), dt)}
+    specs = {"wi": ("embed", "ffn"), "wo": ("ffn", "embed")}
+    if gated:
+        params["wg"] = dense_init(ks[2], (d, ff), dt)
+        specs["wg"] = ("embed", "ffn")
+    return params, specs
+
+
+def mlp_forward(p: dict, cfg, x: jax.Array) -> jax.Array:
+    act = cfg.activation
+    hi = x @ p["wi"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * hi
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * hi
+    elif act == "squared_relu":   # nemotron-4
+        r = jax.nn.relu(hi)
+        h = r * r
+    elif act == "gelu":
+        h = jax.nn.gelu(hi)
+    else:
+        raise ValueError(act)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(key, cfg) -> tuple[dict, dict]:
+    v, d = cfg.padded_vocab, cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    n_emb = max(cfg.n_codebooks, 1)
+    params = {
+        "tok": _normal(k1, (n_emb, v, d), dt, 1.0),
+        "out": dense_init(k2, (d, n_emb * v), dt),
+        "ln_f": jnp.ones((d,), dt),
+    }
+    specs = {"tok": (None, "vocab", "embed"),
+             "out": ("embed", "vocab"),
+             "ln_f": ("embed",)}
+    return params, specs
+
+
+def embed_tokens(p: dict, cfg, tokens: jax.Array) -> jax.Array:
+    """tokens: [B, S] (or [B, S, n_codebooks] for audio). Returns [B, S, d]."""
+    if cfg.n_codebooks:
+        # sum of per-codebook embeddings (MusicGen-style)
+        embs = [jnp.take(p["tok"][i], tokens[..., i], axis=0)
+                for i in range(cfg.n_codebooks)]
+        return functools.reduce(jnp.add, embs)
+    return jnp.take(p["tok"][0], tokens, axis=0)
+
+
+def unembed(p: dict, cfg, x: jax.Array) -> jax.Array:
+    """Returns logits [B, S, n_emb * padded_vocab] in f32."""
+    logits = jnp.einsum("bsd,dv->bsv", x, p["out"]).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits

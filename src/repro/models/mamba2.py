@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the
+recurrence is computed as a masked quadratic form (MXU-friendly), states are
+passed between chunks with a short `lax.scan`. Decode carries the
+``[B, nh, hd, dstate]`` recurrent state plus a causal-conv ring — O(1) per
+token, which is what makes the ``long_500k`` shape runnable for this family.
+
+A step-by-step sequential reference (:func:`ssd_reference`) backs the
+property tests: chunked == sequential up to f32 tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state   # x, B, C share the conv
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2(key, cfg) -> tuple[dict, dict]:
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * cfg.ssm_state + nheads  # z, x, B, C, dt
+    params = {
+        "in_proj": nn.dense_init(ks[0], (d, d_in_proj), dt),
+        "conv_w": nn.dense_init(ks[1], (cfg.conv_width, conv_dim), dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dt),
+        "out_proj": nn.dense_init(ks[2], (d_inner, d), dt),
+    }
+    specs = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return params, specs
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nheads, _ = dims(cfg)
+    ns = cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner:2 * d_inner + ns]
+    c = zxbcdt[..., 2 * d_inner + ns:2 * d_inner + 2 * ns]
+    dt = zxbcdt[..., 2 * d_inner + 2 * ns:]
+    return z, x, b, c, dt
+
+
+def causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel [W, C] + silu."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + bias)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<k<=i} dA[k]."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int, h0=None):
+    """SSD forward.
+
+    x: [B, S, nh, hd]; dt: [B, S, nh] (post-softplus); a: [nh] (negative);
+    b, c: [B, S, ns]. Returns (y [B,S,nh,hd], h_final [B,nh,hd,ns]).
+    """
+    bsz, s, nh, hd = x.shape
+    ns = b.shape[-1]
+    pad = (-s) % chunk
+    if pad:  # zero-pad the tail: dt=0 steps leave h untouched (decay=1, b=0)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(bsz, nc, chunk, nh, hd).astype(f32)
+    dtr = dt.reshape(bsz, nc, chunk, nh).astype(f32)
+    br = b.reshape(bsz, nc, chunk, ns).astype(f32)
+    cr = c.reshape(bsz, nc, chunk, ns).astype(f32)
+
+    dA = dtr * a                                   # [B, nc, Q, nh]
+    dAh = dA.transpose(0, 1, 3, 2)                 # [B, nc, nh, Q]
+    # within-chunk quadratic (diag) term
+    lmat = jnp.exp(_segsum(dAh))                   # [B, nc, nh, Q, Q]
+    cb = jnp.einsum("bnqs,bnts->bnqt", cr, br)     # [B, nc, Q, Q]
+    scores = cb[:, :, None] * lmat                 # [B, nc, nh, Q, Q]
+    y_diag = jnp.einsum("bnhqt,bnth,bnthd->bnqhd", scores, dtr, xr)
+
+    # chunk states: S_n = sum_t exp(cum_end - cum_t) dt_t B_t x_t^T
+    cum = jnp.cumsum(dAh, axis=-1)                 # [B, nc, nh, Q]
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)    # [B, nc, nh, Q]
+    states = jnp.einsum("bnht,bnth,bnts,bnthd->bnhds",
+                        decay_to_end, dtr, br, xr)  # [B, nc, nh, hd, ns]
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])            # [B, nc, nh]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hd, ns), f32)
+
+    def step(h, inp):
+        dec, st = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+    dec_t = chunk_decay.transpose(1, 0, 2)         # [nc, B, nh]
+    st_t = states.transpose(1, 0, 2, 3, 4)         # [nc, B, nh, hd, ns]
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(f32), (dec_t, st_t))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)     # [B, nc, nh, hd, ns]
+
+    # cross-chunk (off-diagonal) term: y_t += C_t . (decay_from_start h_prev)
+    decay_from_start = jnp.exp(cum)                # [B, nc, nh, Q]
+    y_off = jnp.einsum("bnts,bnht,bnhds->bnthd",
+                       cr, decay_from_start, h_prevs)
+    y = (y_diag + y_off).reshape(bsz, s_pad, nh, hd)[:, :s]
+    return y, h_final
+
+
+def ssd_reference(x, dt, a, b, c, h0=None):
+    """Sequential recurrence oracle (tests): h_t = h*exp(dt a) + dt B x."""
+    bsz, s, nh, hd = x.shape
+    ns = b.shape[-1]
+    f32 = jnp.float32
+    h = (jnp.zeros((bsz, nh, hd, ns), f32) if h0 is None else h0.astype(f32))
+    ys = []
+    for t in range(s):
+        dtt = dt[:, t].astype(f32)                       # [B, nh]
+        decay = jnp.exp(dtt * a)                         # [B, nh]
+        xt = x[:, t].astype(f32)                         # [B, nh, hd]
+        bt = b[:, t].astype(f32)                         # [B, ns]
+        upd = jnp.einsum("bh,bhd,bs->bhds", dtt, xt, bt)
+        h = h * decay[..., None, None] + upd
+        yt = jnp.einsum("bhds,bs->bhd", h, c[:, t].astype(f32))
+        ys.append(yt)
+    return jnp.stack(ys, axis=1), h
+
+
+def mamba2_forward(p: dict, cfg, xin: jax.Array) -> jax.Array:
+    """Full mixer over [B, S, d] (train / prefill)."""
+    d_inner, nheads, conv_dim = dims(cfg)
+    zxbcdt = xin @ p["in_proj"]
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = causal_conv(jnp.concatenate([x, b, c], -1), p["conv_w"], p["conv_b"])
+    x, b, c = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + cfg.ssm_state],
+               xbc[..., d_inner + cfg.ssm_state:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    bsz, s = xin.shape[0], xin.shape[1]
+    xh = x.reshape(bsz, s, nheads, cfg.ssm_head_dim)
+    y, _ = ssd_chunked(xh, dt, a, b, c, min(cfg.ssm_chunk, s))
+    y = y + (p["d_skip"][:, None] * xh.astype(jnp.float32))
+    y = y.reshape(bsz, s, d_inner).astype(xin.dtype)
+    y = nn.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def init_mamba2_state(cfg, batch: int):
+    d_inner, nheads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                          jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def mamba2_state_specs(cfg):
+    return {"conv": ("batch", None, "ssm_inner"),
+            "ssm": ("batch", "ssm_heads", None, "state")}
+
+
+def mamba2_decode(p: dict, cfg, state: dict, xin: jax.Array):
+    """Single-token step. xin: [B, 1, d]. Returns (y [B,1,d], new_state)."""
+    d_inner, nheads, conv_dim = dims(cfg)
+    zxbcdt = xin[:, 0] @ p["in_proj"]
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([x, b, c], -1)          # [B, conv_dim]
+    window = jnp.concatenate([state["conv"], xbc_new[:, None]], 1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+    x = conv_out[..., :d_inner]
+    b = conv_out[..., d_inner:d_inner + cfg.ssm_state]
+    c = conv_out[..., d_inner + cfg.ssm_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B, nh]
+    a = -jnp.exp(p["a_log"])
+    xt = x.reshape(-1, nheads, cfg.ssm_head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * a)
+    upd = jnp.einsum("bh,bhd,bs->bhds", dt, xt, b.astype(jnp.float32))
+    h = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhds,bs->bhd", h, c.astype(jnp.float32))
+    y = y + p["d_skip"][:, None] * xt
+    y = y.reshape(-1, 1, d_inner).astype(xin.dtype)
+    y = nn.rms_norm(y * jax.nn.silu(z[:, None]), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": h}

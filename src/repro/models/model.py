@@ -1,0 +1,132 @@
+"""Public model API: loss, step functions, and ShapeDtypeStruct input specs
+for every (architecture x shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard_hint
+from repro.models import transformer
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean CE over [B, S]; logits are f32 [B, S, V_padded] (padded ids never
+    appear in labels, so the padded tail only shifts the partition function
+    by exp(logit) of untrained columns — we mask them to -inf instead)."""
+    v = logits.shape[-1]
+    if v != vocab_size:
+        pad_mask = jnp.arange(v) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    logits = transformer.forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.n_codebooks:
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.padded_vocab)
+        losses = [cross_entropy(logits[:, :, i], labels[..., i],
+                                cfg.vocab_size)
+                  for i in range(cfg.n_codebooks)]
+        return jnp.mean(jnp.stack(losses))
+    return cross_entropy(logits, labels, cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation) + logical dims
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract input batch for one dry-run cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+    if shape.kind == "train":
+        batch = {"tokens": _sds(tok_shape, i32),
+                 "labels": _sds(tok_shape, i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((b, s, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+            batch["vision_mask"] = _sds((b, s), jnp.bool_)
+            batch["positions"] = _sds((b, s, 3), i32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds(tok_shape, i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((b, s, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+            batch["vision_mask"] = _sds((b, s), jnp.bool_)
+            batch["positions"] = _sds((b, s, 3), i32)
+        return batch
+    if shape.kind == "decode":
+        tok1 = (b, 1, cfg.n_codebooks) if cfg.n_codebooks else (b, 1)
+        batch = {"tokens": _sds(tok1, i32), "pos": _sds((), i32)}
+        if cfg.family == "vlm":
+            batch["positions"] = _sds((b, 1, 3), i32)
+        return batch
+    raise ValueError(shape.kind)
+
+
+def batch_logical_dims(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical axes for each input tensor (resolved by the sharding engine)."""
+    tok = ("batch", "seq", None) if cfg.n_codebooks else ("batch", "seq")
+    if shape.kind in ("train", "prefill"):
+        dims = {"tokens": tok}
+        if shape.kind == "train":
+            dims["labels"] = tok
+        if cfg.family == "vlm":
+            dims["vision_embeds"] = ("batch", "seq", "embed")
+            dims["vision_mask"] = ("batch", "seq")
+            dims["positions"] = ("batch", "seq", None)
+        return dims
+    tok1 = ("batch", None, None) if cfg.n_codebooks else ("batch", None)
+    dims = {"tokens": tok1, "pos": None}
+    if cfg.family == "vlm":
+        dims["positions"] = ("batch", None, None)
+    return dims
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(ShapeDtypeStruct tree, logical-dims tree) for the decode cache."""
+    states = jax.eval_shape(
+        lambda: transformer.init_states(cfg, shape.global_batch,
+                                        shape.seq_len))
+    dims = transformer.state_specs(cfg)
+    return states, dims
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; jitted by the launcher with shardings)
+# ---------------------------------------------------------------------------
+
+
+def make_train_loss(cfg: ModelConfig) -> Callable:
+    return functools.partial(loss_fn, cfg=cfg)
+
+
+def make_prefill(cfg: ModelConfig) -> Callable:
+    def fn(params, batch):
+        logits, states = transformer.prefill(params, cfg, batch)
+        return logits[:, -1:], states
+    return fn
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def fn(params, states, batch):
+        return transformer.decode_step(params, cfg, states, batch)
+    return fn

@@ -1,0 +1,260 @@
+"""Token-dropping Mixture-of-Experts with expert parallelism.
+
+Sort-based dispatch (the production pattern: no [T, E, cap] one-hots):
+tokens are argsorted by routed expert, positioned within their expert group
+via a cumulative-count offset, dropped beyond ``capacity``, scattered into an
+``[E, cap, d]`` buffer (expert-sharded over the model axis), transformed by a
+batched per-expert FFN einsum, and combined back with router weights.
+
+Capacity is static: cap = ceil(cf * T * k / E) — so the whole layer lowers to
+fixed shapes (required for pjit / the multi-pod dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.distributed.sharding import shard_hint
+from repro.models import layers as nn
+
+
+def init_moe(key, cfg) -> tuple[dict, dict]:
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    gated = cfg.activation in ("swiglu", "geglu")
+    params = {
+        "router": nn.dense_init(ks[0], (d, e), jnp.float32),
+        "wi": nn.dense_init(ks[1], (e, d, ff), dt, in_axes=(1,)),
+        "wo": nn.dense_init(ks[2], (e, ff, d), dt, in_axes=(1,)),
+    }
+    specs = {
+        "router": ("embed", None),
+        "wi": ("experts", "embed", "ffn"),
+        "wo": ("experts", "ffn", "embed"),
+    }
+    if gated:
+        params["wg"] = nn.dense_init(ks[3], (e, d, ff), dt, in_axes=(1,))
+        specs["wg"] = ("experts", "embed", "ffn")
+    if cfg.n_shared_experts:
+        shared, sspec = nn.init_mlp(ks[4], cfg,
+                                    d_ff=ff * cfg.n_shared_experts)
+        params["shared"] = shared
+        specs["shared"] = sspec
+    return params, specs
+
+
+def _expert_act(cfg, ebuf, p):
+    hi = jnp.einsum("ecd,edf->ecf", ebuf, p["wi"])
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", ebuf, p["wg"])
+        gate = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+        h = gate * hi
+    elif cfg.activation == "squared_relu":
+        r = jax.nn.relu(hi)
+        h = r * r
+    else:
+        h = jax.nn.gelu(hi)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token
+              / cfg.n_experts)
+    return max(4, -(-cap // 4) * 4)  # round up to a multiple of 4
+
+
+def _dispatch_combine(cfg, xf, logits, wi, wg, wo, e_lo: int, e_local: int,
+                      cap: int):
+    """Sort-based dispatch restricted to experts [e_lo, e_lo + e_local).
+
+    xf: [T, d]; logits: [T, E_total]. Returns (y [T, d], counts [E_total])
+    where y contains only the local experts' contributions (partial sum —
+    the EP caller psums it across the expert-parallel axis).
+    """
+    t, d = xf.shape
+    k = cfg.experts_per_token
+    gate_vals, gate_idx = jax.lax.top_k(logits, k)             # [T, k]
+    weights = jax.nn.softmax(gate_vals, axis=-1)               # [T, k]
+
+    flat_e = gate_idx.reshape(-1)                              # [T*k] global
+    counts_all = jnp.bincount(flat_e, length=cfg.n_experts)
+    loc = flat_e - e_lo
+    is_local = (loc >= 0) & (loc < e_local)
+    loc = jnp.where(is_local, loc, e_local)                    # OOB sentinel
+    order = jnp.argsort(loc)                                   # locals first
+    sorted_e = loc[order]
+    counts = jnp.bincount(loc, length=e_local + 1)[:e_local]
+    offsets = jnp.cumsum(counts) - counts
+    safe_e = jnp.clip(sorted_e, 0, e_local - 1)
+    pos_in_e = jnp.arange(t * k) - offsets[safe_e]
+    keep = (sorted_e < e_local) & (pos_in_e < cap)
+    dest = safe_e * cap + jnp.clip(pos_in_e, 0, cap - 1)
+    src_tok = order // k
+
+    scatter_idx = jnp.where(keep, dest, e_local * cap)
+    buf = jnp.zeros((e_local * cap, d), xf.dtype)
+    buf = buf.at[scatter_idx].set(xf[src_tok], mode="drop")
+    p_local = {"wi": wi, "wo": wo}
+    if wg is not None:
+        p_local["wg"] = wg
+    out = _expert_act(cfg, buf.reshape(e_local, cap, d),
+                      p_local).reshape(e_local * cap, d)
+
+    gathered = jnp.take(out, jnp.where(keep, dest, 0), axis=0)
+    w_sorted = weights.reshape(-1)[order]
+    contrib = gathered * (w_sorted * keep).astype(gathered.dtype)[:, None]
+    y = jnp.zeros((t, d), xf.dtype).at[src_tok].add(contrib.astype(xf.dtype))
+    return y, counts_all
+
+
+def moe_forward_ep(p: dict, cfg, x: jax.Array, mesh,
+                   rules=None) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via explicit shard_map (§Perf kimi iteration 1).
+
+    Tokens stay on their (pod, data) shard (activations are replicated
+    along "model" between layers anyway); each "model" shard dispatches to
+    its local n_experts/16 experts and contributes a partial y, combined
+    with ONE psum over the model axis — instead of GSPMD replicating and
+    all-reducing the full [T*k, d] dispatch buffers (the baseline's 98
+    TB/device of all-reduce wire traffic).
+    """
+    b, s, d = x.shape
+    rules = rules or SH.DEFAULT_RULES
+    x_spec = SH.resolve_spec(mesh, ("batch", "seq", None), x.shape, rules)
+    batch_axes = x_spec[0]
+    n_batch = 1
+    if batch_axes:
+        for a in (batch_axes if isinstance(batch_axes, tuple)
+                  else (batch_axes,)):
+            n_batch *= mesh.shape[a]
+    e_par = mesh.shape.get("model", 1)
+    if cfg.n_experts % e_par:
+        e_par = 1  # indivisible: run experts replicated (local dispatch)
+    e_local = cfg.n_experts // e_par
+    t_local = (b // n_batch) * s
+    cap = capacity(cfg, t_local)
+    gated = cfg.activation in ("swiglu", "geglu")
+
+    w_spec = P("model", None, None) if e_par > 1 else P(None, None, None)
+
+    def local_moe(xl, router, wi, wg, wo):
+        tl = xl.shape[0] * xl.shape[1]
+        xf = xl.reshape(tl, d)
+        logits = xf.astype(jnp.float32) @ router
+        e_lo = jax.lax.axis_index("model") * e_local if e_par > 1 else 0
+        y, counts = _dispatch_combine(cfg, xf, logits, wi,
+                                      wg if gated else None, wo,
+                                      e_lo, e_local, cap)
+        if e_par > 1:
+            y = jax.lax.psum(y, "model")
+        # Switch aux loss: local stats are identical across model shards
+        # (same tokens, same router) but differ per batch shard -> pmean.
+        probs = jax.nn.softmax(logits, axis=-1)
+        frac = counts.astype(jnp.float32) / (tl * cfg.experts_per_token)
+        aux = cfg.n_experts * jnp.sum(frac * probs.mean(0))
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return y.reshape(xl.shape), aux
+
+    mapped = jax.shard_map(
+        local_moe, mesh=mesh, check_vma=False,
+        in_specs=(x_spec, P(), w_spec,
+                  (w_spec if gated else P()), w_spec),
+        out_specs=(x_spec, P()))
+    wg = p.get("wg") if gated else jnp.zeros((), x.dtype)
+    y, aux = mapped(x, p["router"], p["wi"], wg, p["wo"])
+    if cfg.n_shared_experts:
+        y = y + nn.mlp_forward(p["shared"], cfg, x.reshape(-1, d)).reshape(
+            x.shape)
+    return y, aux
+
+
+def moe_forward(p: dict, cfg, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_load_balance_loss).
+
+    Dispatches to the expert-parallel shard_map implementation when
+    cfg.moe_impl == "ep" and a mesh context with a model axis is active;
+    otherwise the GSPMD auto-partitioned path below.
+    """
+    # EP pays one psum + per-shard dispatch per layer — a win when there
+    # are many tokens per shard (train/prefill), a loss for single-token
+    # decode where the batch is smaller than the expert count (measured:
+    # kimi decode_32k collective 2.1 -> 6.9 s under EP). Heuristic: EP
+    # only when global tokens >= 2x experts.
+    if cfg.moe_impl == "ep" and x.shape[0] * x.shape[1] >= 2 * cfg.n_experts:
+        mesh, rules = SH.current_mesh_and_rules()
+        if mesh is not None and "model" in mesh.shape:
+            return moe_forward_ep(p, cfg, x, mesh, rules)
+    return moe_forward_gspmd(p, cfg, x)
+
+
+def moe_forward_gspmd(p: dict, cfg,
+                      x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Auto-partitioned (GSPMD) dispatch — the baseline implementation."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    cap = capacity(cfg, t)
+
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["router"])            # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(logits, k)             # [T, k]
+    weights = jax.nn.softmax(gate_vals, axis=-1)               # [T, k]
+
+    # --- sort-based dispatch ------------------------------------------------
+    flat_e = gate_idx.reshape(-1)                              # [T*k]
+    order = jnp.argsort(flat_e)                                # stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)                    # [E]
+    offsets = jnp.cumsum(counts) - counts                      # group starts
+    pos_in_e = jnp.arange(t * k) - offsets[sorted_e]
+    keep = pos_in_e < cap
+    dest = sorted_e * cap + jnp.clip(pos_in_e, 0, cap - 1)
+    src_tok = order // k                                       # token per slot
+
+    # scatter into the expert buffer; dropped slots go out of bounds -> drop
+    scatter_idx = jnp.where(keep, dest, e * cap)
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[scatter_idx].set(xf[src_tok], mode="drop")
+    ebuf = shard_hint(buf.reshape(e, cap, d), ("experts", None, "embed"))
+
+    out = _expert_act(cfg, ebuf, p).reshape(e * cap, d)
+
+    # --- combine ------------------------------------------------------------
+    gathered = jnp.take(out, jnp.where(keep, dest, 0), axis=0)
+    w_sorted = weights.reshape(-1)[order]
+    contrib = gathered * (w_sorted * keep).astype(gathered.dtype)[:, None]
+    y = jnp.zeros((t, d), x.dtype).at[src_tok].add(
+        contrib.astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        y = y + nn.mlp_forward(p["shared"], cfg, xf)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = counts.astype(jnp.float32) / (t * k)
+    aux = e * jnp.sum(frac * probs.mean(0))
+    return y.reshape(b, s, d), aux
+
+
+def moe_forward_dense(p: dict, cfg, x: jax.Array) -> jax.Array:
+    """Reference: every expert over every token (tests only — O(E) compute)."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    gate_vals, gate_idx = jax.lax.top_k(logits, cfg.experts_per_token)
+    weights = jax.nn.softmax(gate_vals, axis=-1)
+    all_out = _expert_act(cfg, jnp.broadcast_to(xf, (cfg.n_experts,) + xf.shape), p)
+    per_tok = all_out.transpose(1, 0, 2)      # [T, E, d]
+    y = jnp.zeros_like(xf)
+    for j in range(cfg.experts_per_token):
+        sel = jnp.take_along_axis(per_tok, gate_idx[:, j][:, None, None],
+                                  axis=1)[:, 0]            # [T, d]
+        y = y + weights[:, j:j + 1].astype(xf.dtype) * sel
+    if cfg.n_shared_experts:
+        y = y + nn.mlp_forward(p["shared"], cfg, xf)
+    return y.reshape(b, s, d)

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: two parallel projections d_model -> d_rnn; branch 1 goes through a
+width-4 causal conv then the Real-Gated LRU; branch 2 is a GeLU gate; the
+product is projected back. Training uses ``jax.lax.associative_scan`` over
+the affine recurrence h_t = a_t h_{t-1} + b_t (log-depth); decode is the
+O(1) step — with the 1:2 local-attention pattern this makes the 500k-token
+decode shape tractable (state is [B, d_rnn], not a KV cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+
+_C = 8.0  # Griffin's gate sharpness constant
+
+
+def init_rglru(key, cfg) -> tuple[dict, dict]:
+    d = cfg.d_model
+    d_rnn = d  # RecurrentGemma-2B: d_rnn == d_model (2560)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    params = {
+        "wx": nn.dense_init(ks[0], (d, d_rnn), dt),
+        "wy": nn.dense_init(ks[1], (d, d_rnn), dt),
+        "conv_w": nn.dense_init(ks[2], (cfg.conv_width, d_rnn), dt),
+        "conv_b": jnp.zeros((d_rnn,), dt),
+        "w_r": nn.dense_init(ks[3], (d_rnn, d_rnn), dt),
+        "b_r": jnp.zeros((d_rnn,), jnp.float32),
+        "w_i": nn.dense_init(ks[4], (d_rnn, d_rnn), dt),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        "lam": jnp.full((d_rnn,), 0.65, jnp.float32),  # a ~ sigmoid-ish init
+        "out": nn.dense_init(ks[5], (d_rnn, d), dt),
+    }
+    specs = {
+        "wx": ("embed", "rnn"), "wy": ("embed", "rnn"),
+        "conv_w": (None, "rnn"), "conv_b": ("rnn",),
+        "w_r": ("embed", "rnn"), "b_r": ("rnn",),
+        "w_i": ("embed", "rnn"), "b_i": ("rnn",),
+        "lam": ("rnn",), "out": ("rnn", "embed"),
+    }
+    return params, specs
+
+
+def _gates(p, u):
+    """Returns (log_a, gated_input) in f32 for the recurrence."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization keeps the state bounded
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(p, u):
+    """u: [B, S, d_rnn] -> hidden states [B, S, d_rnn] via associative scan."""
+    a, b = _gates(p, u)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_reference(p, u):
+    """Sequential oracle for tests."""
+    a, b = _gates(p, u)
+    hs = []
+    h = jnp.zeros_like(a[:, 0])
+    for t in range(u.shape[1]):
+        h = a[:, t] * h + b[:, t]
+        hs.append(h)
+    return jnp.stack(hs, axis=1)
+
+
+def rglru_forward(p: dict, cfg, x: jax.Array) -> jax.Array:
+    """Full recurrent block over [B, S, d] (train / prefill)."""
+    from repro.models.mamba2 import causal_conv
+    branch = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wy"])
+    branch = causal_conv(branch, p["conv_w"], p["conv_b"])
+    h = rglru_scan(p, branch).astype(x.dtype)
+    return (h * gate) @ p["out"]
+
+
+def init_rglru_state(cfg, batch: int):
+    d_rnn = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_rnn),
+                          jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+    }
+
+
+def rglru_state_specs(cfg):
+    return {"conv": ("batch", None, "rnn"), "h": ("batch", "rnn")}
+
+
+def rglru_decode(p: dict, cfg, state: dict, x: jax.Array):
+    """x: [B, 1, d] -> (y [B, 1, d], new_state)."""
+    branch = (x[:, 0] @ p["wx"])
+    gate = jax.nn.gelu(x[:, 0] @ p["wy"])
+    window = jnp.concatenate([state["conv"], branch[:, None]], 1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    a, b = _gates(p, conv_out)
+    h = a * state["h"] + b
+    y = (h.astype(x.dtype) * gate) @ p["out"]
+    return y[:, None], {"conv": window[:, 1:], "h": h}

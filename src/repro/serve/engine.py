@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill once, then jitted single-token decode.
+
+Matches the dry-run's ``serve_step``: decode lowers one new token against a
+pre-existing cache (the ``decode_*``/``long_*`` shapes), prefill lowers the
+full-context forward (the ``prefill_*`` shapes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(transformer.prefill, cfg=cfg,
+                              max_len=max_len))
+        self._decode = jax.jit(
+            functools.partial(transformer.decode_step, cfg=cfg))
+
+    def _greedy(self, logits):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            b = logits.shape[0]
+            lg = logits[:, -1].reshape(b, cfg.n_codebooks, cfg.padded_vocab)
+            lg = lg[..., :cfg.vocab_size]
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+        lg = logits[:, -1, :self.cfg.vocab_size]
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+
+    def generate(self, prompt_tokens: jax.Array, n_new: int,
+                 extra: Optional[dict] = None) -> jax.Array:
+        """prompt_tokens: [B, S] (or [B, S, nq]); returns [B, n_new(, nq)]."""
+        cfg = self.cfg
+        b, s = prompt_tokens.shape[0], prompt_tokens.shape[1]
+        batch = {"tokens": prompt_tokens, **(extra or {})}
+        if cfg.family == "vlm" and "positions" not in batch:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, s, 3))
+
+        # one-shot prefill: caches padded out to max_len for the decode loop
+        logits, states = self._prefill(params=self.params, batch=batch)
+
+        out = []
+        tok = self._greedy(logits)
+        for i in range(n_new):
+            out.append(tok)
+            step_batch = {"tokens": tok, "pos": jnp.asarray(s + i, jnp.int32)}
+            if cfg.family == "vlm":
+                step_batch["positions"] = jnp.full((b, 1, 3), s + i, jnp.int32)
+            logits, states = self._decode(params=self.params, states=states,
+                                          batch=step_batch)
+            tok = self._greedy(logits)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,160 @@
+"""Optimizers (pure pytree, no optax dependency): AdamW and Adafactor.
+
+State sharding is ZeRO-1 by default: each state leaf inherits its param's
+PartitionSpec and, where a dim is still replicated and divides the data axis,
+shards it there too (``zero1_dims``) — XLA then materializes the states
+sharded and inserts the reduce-scatter/all-gather pair around the update.
+Adafactor keeps factored second moments (O(rows+cols)) — required to fit the
+1T-param configs (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    state_dtype: str = "float32"
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+# --- AdamW -------------------------------------------------------------------
+
+
+def adamw_init(params, cfg: OptimizerConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: OptimizerConfig):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+# --- Adafactor ---------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params, cfg: OptimizerConfig):
+    def one(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, cfg: OptimizerConfig):
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    decay = 1.0 - (count.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if _factored(p.shape):
+            vr = decay * v["vr"] + (1 - decay) * g2.mean(-1)
+            vc = decay * v["vc"] + (1 - decay) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30))
+            step = gf * jax.lax.rsqrt(denom + 1e-30)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vf = decay * v["v"] + (1 - decay) * g2
+            step = gf * jax.lax.rsqrt(vf + 1e-30)
+            new_v = {"v": vf}
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32)
+                 - lr * step - lr * cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_v
+
+    is_v = lambda t: isinstance(t, dict) and ("vr" in t or "v" in t)
+    out = jax.tree.map(upd, grads, state["v"], params, is_leaf=None)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"v": new_v, "count": count}
+
+
+# --- dispatch ----------------------------------------------------------------
+
+
+def init_fn(kind: str) -> Callable:
+    return {"adamw": adamw_init, "adafactor": adafactor_init}[kind]
+
+
+def update_fn(kind: str) -> Callable:
+    return {"adamw": adamw_update, "adafactor": adafactor_update}[kind]
+
+
+def state_logical_dims(kind: str, param_specs, params):
+    """Logical dims for the optimizer state tree (ZeRO-1: same as params;
+    factored stats inherit the matching prefix of the param's dims)."""
+    if kind == "adamw":
+        return {"m": param_specs, "v": param_specs, "count": None}
+    if kind == "adafactor":
+        def one(spec, p):
+            spec = tuple(spec) if spec is not None else (None,) * p.ndim
+            if _factored(p.shape):
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+            return {"v": spec}
+        return {"v": jax.tree.map(one, param_specs, params,
+                                  is_leaf=lambda s: isinstance(s, tuple) or s is None),
+                "count": None}
+    raise ValueError(kind)

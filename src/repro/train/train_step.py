@@ -1,0 +1,77 @@
+"""Train step: microbatched gradient accumulation + optimizer update.
+
+The returned step function is pure (state, batch) -> (state, metrics) and is
+jitted by the launcher with in/out shardings resolved by the sharding engine
+(params/opt-state sharded per rules; batch sharded over ("pod","data")).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train import optimizer as opt
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: opt.OptimizerConfig):
+    from repro.models import transformer
+    params, specs = transformer.init_model(key, cfg)
+    state = {
+        "params": params,
+        "opt": opt.init_fn(opt_cfg.kind)(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return state, specs
+
+
+def state_logical_dims(cfg: ModelConfig, opt_cfg, param_specs, params):
+    return {
+        "params": param_specs,
+        "opt": opt.state_logical_dims(opt_cfg.kind, param_specs, params),
+        "step": None,
+    }
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.OptimizerConfig,
+                    microbatches: int = 1) -> Callable:
+    update = opt.update_fn(opt_cfg.kind)
+
+    def loss(params, batch):
+        return M.loss_fn(params, cfg, batch)
+
+    grad_fn = jax.value_and_grad(loss)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            loss_val, grads = grad_fn(params, batch)
+        else:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((microbatches, -1) + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                l, g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(lambda x: x.astype(jnp.float32), g))
+                return (acc, lsum + l), None
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(body, (acc0, 0.0), mb_batch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss_val = lsum / microbatches
+
+        grads, gnorm = opt.clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_opt = update(grads, state["opt"], params, opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss_val, "grad_norm": gnorm,
+                   "step": new_state["step"]}
+        return new_state, metrics
+
+    return train_step

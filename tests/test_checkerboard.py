@@ -1,0 +1,138 @@
+"""Core algorithm equivalences (paper §3).
+
+The chain of trust: the full-lattice roll oracle is transparently correct;
+Algorithm 1 (blocked matmul) and Algorithm 2 (compact quads) must be BITWISE
+identical to it when fed the same uniforms. Property-style sweeps over
+sizes, block sizes, dtypes, temperatures and seeds.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checkerboard as cb
+from repro.core import lattice as L
+from repro.core import observables as obs
+
+
+def _probs(key, shape):
+    kb, kw = jax.random.split(key)
+    return (jax.random.uniform(kb, shape, jnp.float32),
+            jax.random.uniform(kw, shape, jnp.float32))
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+@pytest.mark.parametrize("size,bs", [(64, 32), (128, 32), (256, 128),
+                                     (128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("beta", [0.25, 0.4406868, 1.0])
+def test_algorithm2_matches_oracle(seed, size, bs, dtype, beta):
+    key = jax.random.PRNGKey(seed)
+    full = L.random_lattice(key, size, size, dtype)
+    pb, pw = _probs(jax.random.fold_in(key, 1), (size, size))
+    want = cb.sweep_full(full, pb, pw, beta)
+    got = cb.sweep_compact(L.to_quads(full), cb.quad_probs_from_full(pb, pw),
+                           beta, block_size=bs)
+    assert bool(jnp.all(L.from_quads(got) == want))
+
+
+@pytest.mark.parametrize("size,bs", [(64, 32), (128, 64)])
+@pytest.mark.parametrize("color", [0, 1])
+def test_algorithm1_matches_oracle(size, bs, color):
+    key = jax.random.PRNGKey(11)
+    full = L.random_lattice(key, size, size, jnp.bfloat16)
+    probs = jax.random.uniform(jax.random.fold_in(key, 2), (size, size))
+    want = cb.update_color_full(full, probs, 0.44, color)
+    got = cb.update_naive(full, probs, 0.44, color, block_size=bs)
+    assert bool(jnp.all(got == want))
+
+
+def test_rectangular_lattice():
+    key = jax.random.PRNGKey(5)
+    h, w = 64, 128
+    full = L.random_lattice(key, h, w, jnp.bfloat16)
+    pb, pw = _probs(jax.random.fold_in(key, 1), (h, w))
+    want = cb.sweep_full(full, pb, pw, 0.5)
+    got = cb.sweep_compact(L.to_quads(full), cb.quad_probs_from_full(pb, pw),
+                           0.5, block_size=32)
+    assert bool(jnp.all(L.from_quads(got) == want))
+
+
+@pytest.mark.parametrize("beta", [0.1, 0.4406868, 2.0])
+def test_lut_equals_exp_acceptance(beta):
+    """The 5-entry LUT must agree with exp() for every reachable nn*sigma."""
+    nn = jnp.array([-4.0, -2.0, 0.0, 2.0, 4.0], jnp.float32)
+    sigma = jnp.ones_like(nn)
+    lut = cb.acceptance(nn, sigma, beta, "lut")
+    exp = cb.acceptance(nn, sigma, beta, "exp")
+    np.testing.assert_allclose(np.asarray(lut), np.asarray(exp), rtol=1e-6)
+    for x, a in zip(np.asarray(nn), np.asarray(lut)):
+        assert math.isclose(float(a), math.exp(-2.0 * beta * x), rel_tol=1e-6)
+
+
+def test_acceptance_exact_in_bf16():
+    """sigma*nn in {-4..4} is exact in bf16, so the LUT index is exact."""
+    nn = jnp.array([-4, -2, 0, 2, 4], jnp.bfloat16)
+    sigma = jnp.array([1, -1, 1, -1, 1], jnp.bfloat16)
+    x = nn * sigma
+    assert set(np.asarray(x, np.float32)) <= {-4.0, -2.0, 0.0, 2.0, 4.0}
+
+
+def test_update_changes_only_selected_color():
+    key = jax.random.PRNGKey(9)
+    size = 64
+    full = L.random_lattice(key, size, size, jnp.bfloat16)
+    probs = jnp.zeros((size, size))  # accept everything -> flip all color-0
+    out = cb.update_color_full(full, probs, 0.44, 0)
+    i = np.add.outer(np.arange(size), np.arange(size))
+    f, o = np.asarray(full, np.float32), np.asarray(out, np.float32)
+    np.testing.assert_array_equal(o[i % 2 == 0], -f[i % 2 == 0])
+    np.testing.assert_array_equal(o[i % 2 == 1], f[i % 2 == 1])
+
+
+def test_compact_update_changes_only_selected_quads():
+    key = jax.random.PRNGKey(10)
+    quads = L.to_quads(L.random_lattice(key, 64, 64, jnp.bfloat16))
+    p0 = jnp.zeros((32, 32))
+    out = cb.update_color_compact(quads, p0, p0, beta=0.44, color=0,
+                                  block_size=32)
+    assert bool(jnp.all(out[L.Q01] == quads[L.Q01]))
+    assert bool(jnp.all(out[L.Q10] == quads[L.Q10]))
+    assert bool(jnp.all(out[L.Q00] == -quads[L.Q00]))
+    assert bool(jnp.all(out[L.Q11] == -quads[L.Q11]))
+
+
+def test_nn_compact_matches_roll_oracle():
+    """The quad nn-sum identities against the full-lattice roll sums."""
+    key = jax.random.PRNGKey(12)
+    size, bs = 128, 32
+    full = L.random_lattice(key, size, size, jnp.float32)
+    nn_want = L.to_quads(cb.nn_full(full))
+    quads = L.to_quads(full)
+    a, b, c, d = (L.block(quads[i], bs) for i in range(4))
+    kh = L.kernel_compact(bs, jnp.float32)
+    nn_a, nn_d = cb.nn_black(a, b, c, d, kh)
+    nn_b, nn_c = cb.nn_white(a, b, c, d, kh)
+    for got, want_idx in ((nn_a, L.Q00), (nn_b, L.Q01),
+                          (nn_c, L.Q10), (nn_d, L.Q11)):
+        np.testing.assert_array_equal(np.asarray(L.unblock(got)),
+                                      np.asarray(nn_want[want_idx]))
+
+
+def test_energy_never_increases_at_zero_temperature():
+    """beta -> inf: only energy-lowering (or zero-cost) flips are accepted.
+
+    With probs drawn in [0,1) and acceptance exp(-2*beta*x) ~ 0 for x>0,
+    the sweep can only decrease (or keep) the energy.
+    """
+    key = jax.random.PRNGKey(13)
+    quads = L.to_quads(L.random_lattice(key, 64, 64, jnp.bfloat16))
+    e_prev = float(obs.energy_per_spin(quads))
+    for step in range(10):
+        probs = jax.random.uniform(jax.random.fold_in(key, step), (4, 32, 32))
+        quads = cb.sweep_compact(quads, probs, beta=50.0, block_size=32)
+        e = float(obs.energy_per_spin(quads))
+        assert e <= e_prev + 1e-6
+        e_prev = e

@@ -1,0 +1,109 @@
+"""Checkpoint substrate: atomic save/restore, keep-k, bf16 round-trip,
+async writer, and elastic (mesh-agnostic) restore."""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 8), jnp.float32),
+                   "emb": jax.random.normal(k, (16,), jnp.bfloat16)},
+        "opt": {"m": [jnp.zeros((4, 8)), jnp.ones((3,))]},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    state = _state()
+    ckpt.save(str(tmp_path), state, step=7)
+    restored = ckpt.restore(str(tmp_path), state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_bf16_widening_is_exact(tmp_path):
+    state = {"x": jnp.arange(256, dtype=jnp.bfloat16) / 7}
+    ckpt.save(str(tmp_path), state, step=1)
+    r = ckpt.restore(str(tmp_path), state)
+    assert r["x"].dtype == jnp.bfloat16
+    assert bool(jnp.all(r["x"] == state["x"]))
+
+
+def test_keep_k_prunes_old(tmp_path):
+    state = _state()
+    for step in (10, 20, 30, 40, 50):
+        ckpt.save(str(tmp_path), state, step=step, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [40, 50]
+    assert ckpt.latest_step(str(tmp_path)) == 50
+
+
+def test_restore_specific_step(tmp_path):
+    for step in (1, 2):
+        ckpt.save(str(tmp_path), {"s": jnp.asarray(step)}, step=step, keep=5)
+    r = ckpt.restore(str(tmp_path), {"s": jnp.asarray(0)}, step=1)
+    assert int(r["s"]) == 1
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """Temp files must not be picked up as checkpoints (atomicity)."""
+    (tmp_path / ".tmp_step_00000099.npz").write_bytes(b"garbage")
+    assert ckpt.all_steps(str(tmp_path)) == []
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), {"x": jnp.zeros(1)})
+
+
+def test_async_save(tmp_path):
+    state = _state()
+    t = ckpt.save(str(tmp_path), state, step=3, async_=True)
+    assert isinstance(t, threading.Thread)
+    t.join(timeout=30)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    r = ckpt.restore(str(tmp_path), state)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_elastic_restore_across_meshes(subproc, tmp_path):
+    """Save on a (4,)-device mesh, restore onto (2,) — different shardings.
+    Checkpoints are host arrays, so any target sharding works."""
+    path = str(tmp_path)
+    save_code = f"""
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import ckpt
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_mesh((4,), ("data",))
+    x = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                       NamedSharding(mesh, P("data")))
+    ckpt.save({path!r}, {{"x": x}}, step=5)
+    print("SAVED")
+    """
+    out = subproc(save_code, devices=4)
+    assert "SAVED" in out
+    restore_code = f"""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import ckpt
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_mesh((2,), ("data",))
+    like = {{"x": jnp.zeros((8, 8), jnp.float32)}}
+    sh = {{"x": NamedSharding(mesh, P(None, "data"))}}
+    r = ckpt.restore({path!r}, like, shardings=sh)
+    np.testing.assert_array_equal(
+        np.asarray(r["x"]), np.arange(64, dtype=np.float32).reshape(8, 8))
+    assert r["x"].sharding.spec == P(None, "data")
+    print("ELASTIC_OK")
+    """
+    out = subproc(restore_code, devices=2)
+    assert "ELASTIC_OK" in out

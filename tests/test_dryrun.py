@@ -1,0 +1,83 @@
+"""Dry-run machinery on reduced meshes (the full 512-device run is
+``python -m repro.launch.dryrun``; these tests prove the same code path
+lowers + compiles + analyzes on CPU-sized virtual meshes)."""
+import json
+
+import pytest
+
+
+def _run_cells(subproc, cells, mesh="(2, 4)", axes="('data', 'model')",
+               devices=8, micro=2):
+    code = f"""
+    import json
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import dryrun_lib as lib
+    mesh = mesh_lib.make_mesh({mesh}, {axes})
+    recs = []
+    for arch, shape in {cells!r}:
+        rec = lib.run_cell(arch, shape, mesh, "test", microbatches={micro})
+        recs.append({{k: rec.get(k) for k in
+                    ("arch", "shape", "ok", "skipped", "error")}})
+        if rec.get("roofline"):
+            recs[-1]["dominant"] = rec["roofline"]["dominant"]
+            recs[-1]["mfu"] = rec["roofline"]["mfu"]
+    print("RECS=" + json.dumps(recs))
+    """
+    out = subproc(code, devices=devices, timeout=1800)
+    line = [l for l in out.splitlines() if l.startswith("RECS=")][0]
+    return json.loads(line[len("RECS="):])
+
+
+def test_train_cells_compile_small_mesh(subproc):
+    recs = _run_cells(subproc, [("qwen3-0.6b", "train_4k"),
+                                ("mamba2-780m", "train_4k")])
+    for r in recs:
+        assert r["ok"], r
+
+
+def test_prefill_and_decode_cells_compile(subproc):
+    recs = _run_cells(subproc, [("qwen3-0.6b", "prefill_32k"),
+                                ("qwen3-0.6b", "decode_32k")])
+    for r in recs:
+        assert r["ok"], r
+
+
+def test_long500k_runs_for_subquadratic_skips_for_dense(subproc):
+    recs = _run_cells(subproc, [("recurrentgemma-2b", "long_500k"),
+                                ("qwen3-4b", "long_500k")])
+    by_arch = {r["arch"]: r for r in recs}
+    assert by_arch["recurrentgemma-2b"]["ok"]
+    assert not by_arch["recurrentgemma-2b"].get("skipped")
+    assert by_arch["qwen3-4b"]["ok"] and by_arch["qwen3-4b"]["skipped"]
+
+
+def test_ising_cell_compiles_multi_pod_axes(subproc):
+    recs = _run_cells(subproc, [("ising-20x128", "sweep")],
+                      mesh="(2, 2, 2)", axes="('pod', 'data', 'model')")
+    assert recs[0]["ok"], recs[0]
+    assert recs[0]["dominant"] in ("compute", "memory", "collective")
+
+
+def test_moe_cell_compiles(subproc):
+    recs = _run_cells(subproc, [("kimi-k2-1t-a32b", "decode_32k")])
+    assert recs[0]["ok"], recs[0]
+
+
+def test_roofline_record_fields(subproc):
+    out = subproc("""
+    import json
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import dryrun_lib as lib
+    mesh = mesh_lib.make_mesh((2, 4), ("data", "model"))
+    rec = lib.run_cell("qwen3-0.6b", "prefill_32k", mesh, "t")
+    assert rec["ok"], rec
+    rl = rec["roofline"]
+    for k in ("compute_s", "memory_s", "collective_s", "dominant",
+              "model_flops", "useful_flop_ratio", "mfu"):
+        assert k in rl, k
+    assert rl["compute_s"] > 0 and rl["memory_s"] > 0
+    mem = rec["memory"]
+    assert mem["peak_gb"] > 0
+    print("FIELDS_OK")
+    """, devices=8, timeout=1800)
+    assert "FIELDS_OK" in out

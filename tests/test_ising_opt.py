@@ -1,0 +1,129 @@
+"""§Perf optimized Ising pipeline: the integer-threshold acceptance must be
+BITWISE identical to the f32-LUT float path, and the opt pipeline must
+produce the same physics."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checkerboard as cb
+from repro.distributed import ising as dising
+from repro.kernels import ref as kref
+
+
+@pytest.mark.parametrize("beta", [0.1, 0.4406868, 1.0, 2.5])
+def test_thresholds_match_f32_lut_exactly(beta):
+    """For every possible 24-bit uniform near the threshold, the integer
+    compare must agree with the f32 compare."""
+    ts = cb.acceptance_thresholds_u24(beta)
+    for k, x in enumerate((-4.0, -2.0, 0.0, 2.0, 4.0)):
+        a32 = np.float32(math.exp(-2.0 * beta * x))
+        t = ts[k]
+        # probe uniforms around the threshold
+        for u_int in {max(0, t - 2), max(0, t - 1), min(t, (1 << 24) - 1),
+                      min(t + 1, (1 << 24) - 1)}:
+            u = np.float32(u_int) * np.float32(1.0 / (1 << 24))
+            float_accepts = u < a32
+            int_accepts = u_int < t
+            assert float_accepts == int_accepts, (beta, x, u_int, t)
+
+
+@pytest.mark.parametrize("beta", [0.3, 0.4406868, 1.2])
+def test_flip_int_bitwise_matches_ref_flip(beta):
+    """_flip_int on uint32 bits == the kernel-ref float flip, same bits."""
+    key = jax.random.PRNGKey(0)
+    from repro.core import lattice as L
+    sigma = L.random_lattice(key, 64, 64, jnp.bfloat16)
+    # nn values in {-4..4}: build from a real neighbour sum
+    nn = cb.nn_full(sigma).astype(jnp.bfloat16)
+    bits = jax.random.bits(jax.random.fold_in(key, 1), (64, 64), jnp.uint32)
+
+    got = dising._flip_int(sigma, nn, bits, beta)
+
+    acc = kref.lut_acceptance((nn * sigma).astype(jnp.float32), beta)
+    want = jnp.where(kref.bits_to_uniform(bits) < acc, -sigma, sigma)
+    assert bool(jnp.all(got == want))
+
+
+def test_uint16_flip_statistics():
+    """uint16 bits: acceptance within 2^-16 of the float acceptance."""
+    beta = 0.4406868
+    n = 1 << 16
+    bits = jnp.arange(n, dtype=jnp.uint16)  # exhaustive
+    sigma = jnp.ones((n,), jnp.bfloat16)
+    for nn_val in (-4.0, -2.0, 0.0, 2.0, 4.0):
+        nn = jnp.full((n,), nn_val, jnp.bfloat16)
+        out = dising._flip_int(sigma, nn, bits, beta)
+        frac = float(jnp.mean((out == -1).astype(jnp.float32)))
+        want = min(1.0, math.exp(-2.0 * beta * nn_val))
+        assert abs(frac - want) <= 2.0 / (1 << 16) + 1e-9, (nn_val, frac)
+
+
+def test_opt_pipeline_physics(subproc):
+    """Cold lattice at low T stays ordered under the opt pipeline + rbg."""
+    out = subproc("""
+    import jax, jax.numpy as jnp
+    from repro.launch import mesh as mesh_lib
+    from repro.distributed import ising as dising
+    from repro.core import lattice as L
+
+    mesh = mesh_lib.make_mesh((2, 2), ("data", "model"))
+    cfg = dising.DistIsingConfig(beta=1.0, block_size=16,
+                                 row_axes=("data",), col_axes=("model",),
+                                 pipeline="opt", rng="rbg",
+                                 bits_dtype="uint16")
+    quads = L.to_quads(L.cold_lattice(128, 128, jnp.bfloat16))
+    qb = jnp.stack([L.block(quads[i], 16) for i in range(4)])
+    qb = jax.device_put(qb, dising.lattice_sharding(mesh, cfg))
+    run = dising.make_run_sweeps_fn(mesh, cfg, n_sweeps=40)
+    outq = run(qb, jax.random.PRNGKey(0))
+    m = abs(float(jnp.mean(jax.device_get(outq).astype(jnp.float32))))
+    assert m > 0.95, m
+    # hot lattice at high T stays disordered (acceptance not degenerate)
+    cfg2 = dising.DistIsingConfig(beta=0.2, block_size=16,
+                                  row_axes=("data",), col_axes=("model",),
+                                  pipeline="opt", rng="rbg",
+                                  bits_dtype="uint16")
+    key = jax.random.PRNGKey(1)
+    quads2 = L.to_quads(L.random_lattice(key, 128, 128, jnp.bfloat16))
+    qb2 = jnp.stack([L.block(quads2[i], 16) for i in range(4)])
+    qb2 = jax.device_put(qb2, dising.lattice_sharding(mesh, cfg2))
+    run2 = dising.make_run_sweeps_fn(mesh, cfg2, n_sweeps=40)
+    out2 = run2(qb2, key)
+    m2 = abs(float(jnp.mean(jax.device_get(out2).astype(jnp.float32))))
+    assert m2 < 0.2, m2
+    print("OPT_PHYS_OK", m, m2)
+    """, devices=4)
+    assert "OPT_PHYS_OK" in out
+
+
+def test_tuple_sweep_matches_stacked_sweep(subproc):
+    """make_sweep_tuple_fn == make_sweep_fn (same key/step), bitwise."""
+    out = subproc("""
+    import jax, jax.numpy as jnp
+    from repro.launch import mesh as mesh_lib
+    from repro.distributed import ising as dising
+    from repro.core import lattice as L
+
+    mesh = mesh_lib.make_mesh((2, 2), ("data", "model"))
+    cfg = dising.DistIsingConfig(beta=0.6, block_size=16,
+                                 row_axes=("data",), col_axes=("model",),
+                                 pipeline="opt", rng="threefry")
+    key = jax.random.PRNGKey(5)
+    full = L.random_lattice(key, 128, 128, jnp.bfloat16)
+    quads = L.to_quads(full)
+    qb = jnp.stack([L.block(quads[i], 16) for i in range(4)])
+    sh = dising.lattice_sharding(mesh, cfg)
+    step = jnp.asarray(3, jnp.int32)
+
+    stacked = dising.make_sweep_fn(mesh, cfg)(
+        jax.device_put(qb, sh), key, step)
+    tup = dising.make_sweep_tuple_fn(mesh, cfg)(
+        *(jnp.array(qb[i]) for i in range(4)), key, step)
+    got = jnp.stack(tup)
+    assert (jax.device_get(stacked) == jax.device_get(got)).all()
+    print("TUPLE_OK")
+    """, devices=4)
+    assert "TUPLE_OK" in out

@@ -1,0 +1,84 @@
+"""Lattice representation invariants (property-style: randomized round-trips
+over a sweep of shapes, dtypes and seeds)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lattice as L
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("shape", [(8, 8), (16, 32), (64, 128), (6, 10)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_quads_roundtrip(seed, shape, dtype):
+    full = L.random_lattice(jax.random.PRNGKey(seed), *shape, dtype)
+    back = L.from_quads(L.to_quads(full))
+    assert back.dtype == full.dtype
+    assert bool(jnp.all(back == full))
+
+
+@pytest.mark.parametrize("shape,bs", [((32, 32), 8), ((64, 128), 32),
+                                      ((128, 128), 128), ((24, 48), 8)])
+def test_block_roundtrip(shape, bs):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    xb = L.block(x, bs)
+    assert xb.shape == (shape[0] // bs, shape[1] // bs, bs, bs)
+    assert bool(jnp.all(L.unblock(xb) == x))
+
+
+def test_block_rejects_indivisible():
+    x = jnp.zeros((10, 16))
+    with pytest.raises(ValueError):
+        L.block(x, 8)
+
+
+def test_quads_rejects_odd():
+    with pytest.raises(ValueError):
+        L.to_quads(jnp.zeros((7, 8)))
+
+
+def test_quads_parity_layout():
+    """quads[q][r, c] must be full[2r + qr, 2c + qc] for parity (qr, qc)."""
+    full = L.random_lattice(jax.random.PRNGKey(3), 8, 8, jnp.float32)
+    q = L.to_quads(full)
+    f = np.asarray(full)
+    for idx, (qr, qc) in zip((L.Q00, L.Q01, L.Q10, L.Q11),
+                             ((0, 0), (0, 1), (1, 0), (1, 1))):
+        np.testing.assert_array_equal(np.asarray(q[idx]), f[qr::2, qc::2])
+
+
+def test_kernel_naive_is_neighbour_sum():
+    """matmul(sigma, K) + matmul(K, sigma) == 4-neighbour sum (interior)."""
+    n = 16
+    k = L.kernel_naive(n, jnp.float32)
+    sig = L.random_lattice(jax.random.PRNGKey(1), n, n, jnp.float32)
+    nn = sig @ k + k @ sig
+    s = np.asarray(sig)
+    for i in range(1, n - 1):
+        for j in range(1, n - 1):
+            want = s[i - 1, j] + s[i + 1, j] + s[i, j - 1] + s[i, j + 1]
+            assert float(nn[i, j]) == want
+
+
+def test_kernel_compact_structure():
+    kh = np.asarray(L.kernel_compact(8, jnp.float32))
+    assert np.all(np.diag(kh) == 1)
+    assert np.all(np.diag(kh, 1) == 1)
+    assert kh.sum() == 8 + 7  # only diag + superdiag
+
+
+def test_color_mask_parity():
+    m = np.asarray(L.color_mask(8, 0, jnp.float32))
+    i, j = np.indices((8, 8))
+    np.testing.assert_array_equal(m, ((i + j) % 2 == 0).astype(np.float32))
+    m1 = np.asarray(L.color_mask(8, 1, jnp.float32))
+    np.testing.assert_array_equal(m + m1, np.ones((8, 8), np.float32))
+
+
+def test_random_lattice_values_and_balance():
+    full = L.random_lattice(jax.random.PRNGKey(0), 256, 256, jnp.bfloat16)
+    vals = np.unique(np.asarray(full, np.float32))
+    assert set(vals) <= {-1.0, 1.0}
+    # mean magnetization of a hot start is ~0 (binomial, 3 sigma)
+    assert abs(float(jnp.mean(full.astype(jnp.float32)))) < 3.0 / 256

@@ -1,0 +1,154 @@
+"""MoE layer: sort-based dispatch vs dense reference, capacity semantics,
+load-balance aux loss."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import small_config
+from repro.models import moe, transformer
+
+
+def _cfg(**kw):
+    return small_config("kimi-k2-1t-a32b", **kw)
+
+
+def test_dispatch_matches_dense_reference_no_drops():
+    """With capacity_factor high enough that nothing drops, sort-based
+    dispatch must equal the every-expert-every-token reference."""
+    cfg = _cfg(capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p, _ = moe.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.dtype(cfg.dtype))
+    y, aux = moe.moe_forward(p, cfg, x)
+    y_ref = moe.moe_forward_dense(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=5e-2, rtol=5e-2)
+    assert float(aux) > 0.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_top1_routing_matches_reference(seed):
+    cfg = small_config("llama4-maverick-400b-a17b", capacity_factor=8.0,
+                       experts_per_token=1)
+    key = jax.random.PRNGKey(seed)
+    p, _ = moe.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, cfg.d_model),
+                          jnp.float32).astype(jnp.dtype(cfg.dtype))
+    y, _ = moe.moe_forward(p, cfg, x)
+    y_ref = moe.moe_forward_dense(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_capacity_is_static_and_rounded():
+    cfg = _cfg(capacity_factor=1.25)
+    cap = moe.capacity(cfg, 1024)
+    assert cap % 4 == 0 and cap >= 4
+    want = int(1.25 * 1024 * cfg.experts_per_token / cfg.n_experts)
+    assert abs(cap - want) <= 4
+
+
+def test_tokens_drop_beyond_capacity():
+    """Adversarial batch: all tokens route to one expert -> most drop, the
+    layer must still produce finite output of the right shape."""
+    cfg = _cfg(capacity_factor=0.5)
+    key = jax.random.PRNGKey(2)
+    p, _ = moe.init_moe(key, cfg)
+    # identical tokens -> identical routing
+    x = jnp.ones((1, 64, cfg.d_model), jnp.dtype(cfg.dtype))
+    y, aux = moe.moe_forward(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    assert float(aux) > 1.0  # heavily unbalanced -> large aux penalty
+
+
+def test_aux_loss_balanced_routing_near_one():
+    """Uniform routing gives aux ~ 1 (Switch normalization)."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    p, _ = moe.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 9),
+                          (4, 64, cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+    _, aux = moe.moe_forward(p, cfg, x)
+    assert 0.8 < float(aux) < 2.0
+
+
+def test_moe_grads_flow_to_experts_and_router():
+    cfg = _cfg(capacity_factor=4.0)
+    key = jax.random.PRNGKey(4)
+    p, _ = moe.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (2, 8, cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+
+    def loss(p_):
+        y, aux = moe.moe_forward(p_, cfg, x)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["wi"]).sum()) > 0
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def test_ep_equals_gspmd_and_dense(subproc):
+    """The expert-parallel shard_map MoE == dense reference (no drops) on a
+    (data, model) mesh, including gradients."""
+    out = subproc("""
+    import sys; sys.path.insert(0, "tests")
+    import jax, jax.numpy as jnp, numpy as np
+    from conftest import small_config
+    from repro.models import moe
+    from repro.distributed import sharding as SH
+    from repro.launch import mesh as mesh_lib
+
+    mesh = mesh_lib.make_mesh((2, 4), ("data", "model"))
+    cfg = small_config("kimi-k2-1t-a32b", capacity_factor=8.0,
+                       dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p, _ = moe.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (4, 16, cfg.d_model), jnp.float32)
+
+    y_ref = moe.moe_forward_dense(p, cfg, x)
+    with SH.activation_sharding(mesh):
+        y_ep, aux = jax.jit(
+            lambda p_, x_: moe.moe_forward_ep(p_, cfg, x_, mesh))(p, x)
+    np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    assert float(aux) > 0
+
+    # gradients flow through the shard_map + psum
+    def loss(p_):
+        y, aux = moe.moe_forward_ep(p_, cfg, x, mesh)
+        return jnp.sum(y * y) + 0.01 * aux
+    with SH.activation_sharding(mesh):
+        g = jax.jit(jax.grad(loss))(p)
+    assert float(jnp.abs(g["wi"]).sum()) > 0
+    assert float(jnp.abs(g["router"]).sum()) > 0
+    print("EP_OK")
+    """, devices=8)
+    assert "EP_OK" in out
+
+
+def test_moe_in_transformer_trains():
+    cfg = _cfg()
+    from repro.train import optimizer as opt
+    from repro.train import train_step as TS
+    state, _ = TS.init_train_state(jax.random.PRNGKey(0), cfg,
+                                   opt.OptimizerConfig(kind="adafactor"))
+    step = jax.jit(TS.make_train_step(
+        cfg, opt.OptimizerConfig(kind="adafactor")))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    losses = []
+    for _ in range(5):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]  # memorizing a fixed batch

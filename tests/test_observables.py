@@ -1,0 +1,83 @@
+"""Extended observables (chi, C, tau) and batched multi-chain driver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import observables as obs
+from repro.core import sampler
+
+T_C = obs.critical_temperature()
+
+
+def test_susceptibility_zero_for_constant_chain():
+    m = jnp.full((100,), 0.8)
+    # f32 accumulation noise only (x64 unavailable without the global flag)
+    assert abs(obs.susceptibility(m, beta=0.5, n_spins=64)) < 1e-4
+
+
+def test_specific_heat_zero_for_constant_energy():
+    e = jnp.full((100,), -1.5)
+    assert abs(obs.specific_heat(e, beta=0.5, n_spins=64)) < 1e-4
+
+
+def test_autocorrelation_time_white_noise_near_one():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4000,))
+    tau = obs.autocorrelation_time(x)
+    assert 0.5 < tau < 1.5
+
+
+def test_autocorrelation_time_correlated_chain_large():
+    """AR(1) with rho=0.9 has tau = (1+rho)/(1-rho) = 19."""
+    key = jax.random.PRNGKey(1)
+    eps = jax.random.normal(key, (20000,))
+    xs = [0.0]
+    for i in range(1, 20000):
+        xs.append(0.9 * xs[-1] + float(eps[i]))
+    tau = obs.autocorrelation_time(jnp.asarray(xs[2000:]))
+    assert 10 < tau < 30
+
+
+def test_chi_peaks_near_tc():
+    """Susceptibility is maximal near the critical temperature."""
+    key = jax.random.PRNGKey(2)
+    chis = {}
+    for ratio in (0.7, 1.0, 1.5):
+        t = ratio * T_C
+        cfg = sampler.ChainConfig(beta=1.0 / t, n_sweeps=400, block_size=16)
+        q = sampler.init_state(key, 32, 32, hot=bool(t > T_C))
+        _, ms, es = sampler.run_chain(q, jax.random.fold_in(key, ratio * 10),
+                                      cfg)
+        chis[ratio] = obs.susceptibility(ms[150:], 1.0 / t, 32 * 32)
+    assert chis[1.0] > chis[0.7]
+    assert chis[1.0] > chis[1.5]
+
+
+def test_chain_statistics_extended_fields():
+    m = jax.random.uniform(jax.random.PRNGKey(3), (300,))
+    e = -1.0 - jax.random.uniform(jax.random.PRNGKey(4), (300,))
+    st = obs.chain_statistics(m, e, burnin=50, beta=0.4, n_spins=1024)
+    for k in ("chi", "C", "tau_m"):
+        assert k in st and np.isfinite(st[k])
+
+
+def test_batched_chains_match_individual():
+    """vmap'd chains == the same chains run one by one (same folded keys)."""
+    cfg = sampler.ChainConfig(beta=0.6, n_sweeps=10, block_size=8)
+    key = jax.random.PRNGKey(5)
+    qs = jnp.stack([sampler.init_state(jax.random.fold_in(key, 100 + i),
+                                       16, 16) for i in range(3)])
+    fb, mb, eb = sampler.run_chains_batched(qs, key, cfg)
+    for i in range(3):
+        fi, mi, ei = sampler.run_chain(qs[i], jax.random.fold_in(key, i),
+                                       cfg)
+        assert bool(jnp.all(fb[i] == fi))
+        np.testing.assert_array_equal(np.asarray(mb[i]), np.asarray(mi))
+
+
+def test_batched_chains_are_independent():
+    cfg = sampler.ChainConfig(beta=0.44, n_sweeps=15, block_size=8)
+    key = jax.random.PRNGKey(6)
+    q0 = sampler.init_state(key, 16, 16)
+    qs = jnp.stack([q0, q0])  # same start, different per-chain keys
+    final, ms, _ = sampler.run_chains_batched(qs, key, cfg)
+    assert bool(jnp.any(final[0] != final[1]))

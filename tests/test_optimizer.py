@@ -1,0 +1,100 @@
+"""Optimizers: convergence on a quadratic, state shapes, clipping, schedule,
+factored-stat memory for adafactor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optimizer as opt
+
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array(4.0),
+            "mat": jnp.full((4, 8), 2.0)}
+
+
+def _loss(params):
+    return (jnp.sum(params["w"] ** 2) + params["b"] ** 2
+            + jnp.sum(params["mat"] ** 2))
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_converges_on_quadratic(kind):
+    cfg = opt.OptimizerConfig(kind=kind, lr=0.1, weight_decay=0.0,
+                              warmup_steps=1)
+    params = _quadratic_params()
+    state = opt.init_fn(kind)(params, cfg)
+    update = opt.update_fn(kind)
+    l0 = float(_loss(params))
+    for _ in range(200):
+        grads = jax.grad(_loss)(params)
+        params, state = update(grads, state, params, cfg)
+    assert float(_loss(params)) < 0.01 * l0
+
+
+def test_adamw_state_shapes_match_params():
+    params = _quadratic_params()
+    st = opt.adamw_init(params, opt.OptimizerConfig())
+    assert jax.tree.structure(st["m"]) == jax.tree.structure(params)
+    for leaf_p, leaf_m in zip(jax.tree.leaves(params),
+                              jax.tree.leaves(st["m"])):
+        assert leaf_p.shape == leaf_m.shape
+
+
+def test_adafactor_state_is_factored():
+    """2-D params get row+col stats (O(r+c) memory), 1-D keep full."""
+    params = {"mat": jnp.zeros((64, 32)), "vec": jnp.zeros((16,))}
+    st = opt.adafactor_init(params, opt.OptimizerConfig(kind="adafactor"))
+    assert st["v"]["mat"]["vr"].shape == (64,)
+    assert st["v"]["mat"]["vc"].shape == (32,)
+    assert st["v"]["vec"]["v"].shape == (16,)
+
+
+def test_adafactor_memory_savings_vs_adamw():
+    params = {"big": jnp.zeros((1024, 1024))}
+    ada = opt.adafactor_init(params, opt.OptimizerConfig(kind="adafactor"))
+    adam = opt.adamw_init(params, opt.OptimizerConfig())
+    n_ada = sum(x.size for x in jax.tree.leaves(ada))
+    n_adam = sum(x.size for x in jax.tree.leaves(adam))
+    assert n_ada < 0.01 * n_adam
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0, 4.0])}          # norm 5
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(clipped["a"]), np.array([0.6, 0.8]), rtol=1e-6)
+    # under the cap -> untouched
+    same, _ = opt.clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.array([3.0, 4.0]),
+                               rtol=1e-6)
+
+
+def test_warmup_schedule():
+    cfg = opt.OptimizerConfig(lr=1e-3, warmup_steps=10)
+    assert float(opt.schedule(cfg, jnp.array(0))) == pytest.approx(1e-4)
+    assert float(opt.schedule(cfg, jnp.array(9))) == pytest.approx(1e-3)
+    assert float(opt.schedule(cfg, jnp.array(100))) == pytest.approx(1e-3)
+
+
+def test_state_logical_dims_mirror_structure():
+    params = {"mat": jnp.zeros((8, 4)), "vec": jnp.zeros((4,))}
+    specs = {"mat": ("embed", "ffn"), "vec": ("ffn",)}
+    adamw_dims = opt.state_logical_dims("adamw", specs, params)
+    assert adamw_dims["m"]["mat"] == ("embed", "ffn")
+    ada_dims = opt.state_logical_dims("adafactor", specs, params)
+    assert ada_dims["v"]["mat"]["vr"] == ("embed",)
+    assert ada_dims["v"]["mat"]["vc"] == ("ffn",)
+    assert ada_dims["v"]["vec"]["v"] == ("ffn",)
+
+
+def test_weight_decay_pulls_toward_zero():
+    cfg = opt.OptimizerConfig(kind="adamw", lr=0.01, weight_decay=0.1,
+                              warmup_steps=1)
+    params = {"w": jnp.array([10.0])}
+    state = opt.adamw_init(params, cfg)
+    zero_grads = {"w": jnp.zeros((1,))}
+    for _ in range(50):
+        params, state = opt.adamw_update(zero_grads, state, params, cfg)
+    assert float(params["w"][0]) < 10.0

@@ -1,0 +1,87 @@
+"""Physics correctness (paper §4.1, Fig. 4) at CPU-friendly scale.
+
+These are statistical tests with generous margins — they catch sign errors,
+wrong neighbour sums, broken RNG streams, not 4th-decimal biases. The full
+Fig. 4 sweep lives in benchmarks/fig4_correctness.py.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import observables as obs
+from repro.core import sampler
+from repro.core import lattice as L
+
+T_C = obs.critical_temperature()
+
+
+def _run(size, t, sweeps, burnin, dtype="bfloat16", seed=0, hot=True):
+    cfg = sampler.ChainConfig(beta=1.0 / t, n_sweeps=sweeps,
+                              block_size=min(128, size // 2), dtype=dtype)
+    key = jax.random.PRNGKey(seed)
+    quads = sampler.init_state(key, size, size, jnp.dtype(dtype), hot=hot)
+    _, ms, es = sampler.run_chain(quads, jax.random.fold_in(key, 1), cfg)
+    return obs.chain_statistics(ms, es, burnin)
+
+
+def test_ordered_phase_below_tc():
+    st = _run(64, 0.5 * T_C, sweeps=300, burnin=100, hot=False)
+    assert st["m_abs"] > 0.95          # deep ferromagnetic order
+    assert st["E"] < -1.8              # near ground-state energy -2
+
+
+def test_disordered_phase_above_tc():
+    st = _run(64, 2.0 * T_C, sweeps=400, burnin=100)
+    assert st["m_abs"] < 0.2           # thermal fluctuations kill alignment
+    assert st["E"] > -1.0
+
+
+def test_binder_parameter_limits():
+    """U4 -> 2/3 deep in the ordered phase; -> 0 in the disordered phase."""
+    lo = _run(64, 0.5 * T_C, sweeps=300, burnin=100, hot=False)
+    hi = _run(64, 3.0 * T_C, sweeps=500, burnin=150)
+    assert abs(lo["U4"] - 2.0 / 3.0) < 0.05
+    assert hi["U4"] < 0.3
+
+
+def test_bf16_matches_f32_statistics():
+    """Paper's claim: bfloat16 shows no noticeable accuracy difference."""
+    for t in (0.8 * T_C, 1.3 * T_C):
+        a = _run(64, t, sweeps=400, burnin=150, dtype="bfloat16", seed=3)
+        b = _run(64, t, sweeps=400, burnin=150, dtype="float32", seed=4)
+        assert abs(a["m_abs"] - b["m_abs"]) < 0.15
+        assert abs(a["E"] - b["E"]) < 0.15
+
+
+def test_energy_magnetization_consistency_cold_start():
+    quads = sampler.init_state(jax.random.PRNGKey(0), 32, 32, hot=False)
+    assert float(obs.magnetization(quads)) == 1.0
+    assert float(obs.energy_per_spin(quads)) == -2.0  # 2 bonds/spin, J=1
+
+
+def test_exp_and_lut_acceptance_same_physics():
+    st_lut = _run(32, 0.7 * T_C, sweeps=300, burnin=100, seed=5)
+    cfg = sampler.ChainConfig(beta=1.0 / (0.7 * T_C), n_sweeps=300,
+                              block_size=16, accept="exp")
+    key = jax.random.PRNGKey(5)
+    quads = sampler.init_state(key, 32, 32, jnp.bfloat16, hot=True)
+    _, ms, es = sampler.run_chain(quads, jax.random.fold_in(key, 1), cfg)
+    st_exp = obs.chain_statistics(ms, es, 100)
+    assert abs(st_lut["m_abs"] - st_exp["m_abs"]) < 0.15
+
+
+def test_chain_reproducibility():
+    """Counter-based RNG: identical keys -> identical chains."""
+    cfg = sampler.ChainConfig(beta=0.5, n_sweeps=20, block_size=16)
+    key = jax.random.PRNGKey(7)
+    q0 = sampler.init_state(key, 32, 32)
+    qa, ma, _ = sampler.run_chain(q0, key, cfg)
+    qb, mb, _ = sampler.run_chain(q0, key, cfg)
+    assert bool(jnp.all(qa == qb))
+    assert bool(jnp.all(ma == mb))
+
+
+def test_critical_temperature_value():
+    assert math.isclose(T_C, 2.269185, rel_tol=1e-5)

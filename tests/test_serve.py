@@ -1,0 +1,166 @@
+"""Serving-path consistency: prefill + decode must reproduce the
+full-sequence forward logits, for every stateful-layer family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import small_config
+from repro.models import transformer
+from repro.serve.engine import ServeEngine
+
+# one representative per decode-state family
+FAMILIES = ["qwen3-0.6b",          # dense KV cache, qk_norm
+            "recurrentgemma-2b",   # RG-LRU state + windowed cache
+            "mamba2-780m",         # SSM state + conv ring
+            "musicgen-medium"]     # multi-codebook embeddings
+
+
+def _tokens(cfg, b, s, key=0):
+    shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+    return jax.random.randint(jax.random.PRNGKey(key), shape, 0,
+                              cfg.vocab_size, jnp.int32)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode from empty state == full forward, per position.
+
+    f32 configs: bf16 leaves ~0.04 rounding noise between the two schedules,
+    which would mask real bugs at these tolerances."""
+    cfg = small_config(arch, dtype="float32")
+    if cfg.window:
+        cfg = dataclasses.replace(cfg, window=64)  # window >= s: exact match
+    b, s = 2, 12
+    params, _ = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    tokens = _tokens(cfg, b, s)
+    full_logits = transformer.forward(params, cfg, {"tokens": tokens})
+
+    states = transformer.init_states(cfg, b, max_len=s)
+    outs = []
+    for i in range(s):
+        tok = tokens[:, i:i + 1]
+        batch = {"tokens": tok, "pos": jnp.asarray(i, jnp.int32)}
+        logits, states = transformer.decode_step(params, cfg, states, batch)
+        outs.append(logits)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("prompt_len", [8, 11])  # 11: ragged vs ssm_chunk
+def test_prefill_then_decode_matches_forward(arch, prompt_len):
+    """prefill(prompt) -> decode(next...) == forward(prompt+next)."""
+    cfg = small_config(arch, dtype="float32")
+    if cfg.window:
+        cfg = dataclasses.replace(cfg, window=64)
+    b, s, extra = 2, prompt_len, 3
+    params, _ = transformer.init_model(jax.random.PRNGKey(1), cfg)
+    tokens = _tokens(cfg, b, s + extra, key=1)
+    prompt = tokens[:, :s]
+
+    logits_pre, states = transformer.prefill(params, cfg, {"tokens": prompt},
+                                             max_len=s + extra)
+    full = transformer.forward(params, cfg, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(logits_pre[:, -1]),
+                               np.asarray(full[:, s - 1]),
+                               atol=2e-4, rtol=2e-4)
+    for j in range(extra):
+        logits_dec, states = transformer.decode_step(
+            params, cfg, states,
+            {"tokens": tokens[:, s + j:s + j + 1],
+             "pos": jnp.asarray(s + j, jnp.int32)})
+        np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                                   np.asarray(full[:, s + j]),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_prefill_longer_than_window_then_decode():
+    """Windowed layers: prefill s > window must hand decode a ring cache
+    with the token->slot invariant intact."""
+    cfg = small_config("recurrentgemma-2b", window=4, dtype="float32")
+    b, s, extra = 1, 10, 3
+    params, _ = transformer.init_model(jax.random.PRNGKey(2), cfg)
+    tokens = _tokens(cfg, b, s + extra, key=2)
+    full = transformer.forward(params, cfg, {"tokens": tokens})
+    _, states = transformer.prefill(params, cfg, {"tokens": tokens[:, :s]},
+                                    max_len=s + extra)
+    for j in range(extra):
+        logits_dec, states = transformer.decode_step(
+            params, cfg, states,
+            {"tokens": tokens[:, s + j:s + j + 1],
+             "pos": jnp.asarray(s + j, jnp.int32)})
+        np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                                   np.asarray(full[:, s + j]),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_sliding_window_cache_is_ring_buffer():
+    """Decode with a window smaller than the sequence: the cache stays at
+    window size and attention sees only the last `window` tokens."""
+    cfg = small_config("recurrentgemma-2b", window=4, dtype="float32",
+                       layer_pattern="l", n_layers=1, scan_layers=False)
+    b, s = 1, 10
+    params, _ = transformer.init_model(jax.random.PRNGKey(2), cfg)
+    tokens = _tokens(cfg, b, s, key=2)
+    full = transformer.forward(params, cfg, {"tokens": tokens})
+
+    states = transformer.init_states(cfg, b, max_len=s)
+    k_shape = states[0]["k"].shape
+    assert cfg.window in k_shape  # ring buffer, not full length
+    outs = []
+    for i in range(s):
+        logits, states = transformer.decode_step(
+            params, cfg, states,
+            {"tokens": tokens[:, i:i + 1], "pos": jnp.asarray(i, jnp.int32)})
+        outs.append(logits)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = small_config("qwen3-0.6b")
+    params, _ = transformer.init_model(jax.random.PRNGKey(3), cfg)
+    eng = ServeEngine(cfg, params, max_len=32)
+    prompt = _tokens(cfg, 2, 5, key=3)
+    out1 = eng.generate(prompt, n_new=6)
+    out2 = eng.generate(prompt, n_new=6)
+    assert out1.shape == (2, 6)
+    assert bool(jnp.all(out1 == out2))
+    assert bool(jnp.all((out1 >= 0) & (out1 < cfg.vocab_size)))
+
+
+def test_serve_engine_codebooks():
+    cfg = small_config("musicgen-medium")
+    params, _ = transformer.init_model(jax.random.PRNGKey(4), cfg)
+    eng = ServeEngine(cfg, params, max_len=16)
+    prompt = _tokens(cfg, 1, 3, key=4)
+    out = eng.generate(prompt, n_new=4)
+    assert out.shape == (1, 4, cfg.n_codebooks)
+
+
+def test_decode_cache_layouts_agree():
+    """btkh vs bkth cache layouts must produce identical logits."""
+    cfg_a = small_config("qwen3-0.6b", cache_layout="btkh")
+    cfg_b = dataclasses.replace(cfg_a, cache_layout="bkth")
+    params, _ = transformer.init_model(jax.random.PRNGKey(5), cfg_a)
+    tokens = _tokens(cfg_a, 2, 6, key=5)
+    outs = {}
+    for cfg in (cfg_a, cfg_b):
+        states = transformer.init_states(cfg, 2, max_len=6)
+        acc = []
+        for i in range(6):
+            logits, states = transformer.decode_step(
+                params, cfg, states,
+                {"tokens": tokens[:, i:i + 1],
+                 "pos": jnp.asarray(i, jnp.int32)})
+            acc.append(logits)
+        outs[cfg.cache_layout] = jnp.concatenate(acc, 1)
+    np.testing.assert_allclose(np.asarray(outs["btkh"]),
+                               np.asarray(outs["bkth"]),
+                               atol=1e-5, rtol=1e-5)

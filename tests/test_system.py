@@ -1,0 +1,83 @@
+"""End-to-end system behaviour: the paper's simulation driver and the LM
+training driver, exercised through the public APIs the examples use."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import REPO, SRC, small_config
+from repro.core import observables as obs
+from repro.core import sampler
+
+
+def test_measure_curve_detects_phase_transition():
+    """The Fig. 4 driver at toy scale: m(T) high below Tc, low above."""
+    tc = obs.critical_temperature()
+    rows = sampler.measure_curve(
+        jax.random.PRNGKey(0), size=32,
+        temperatures=[0.6 * tc, 1.8 * tc], n_sweeps=250, burnin=100)
+    below, above = rows
+    assert below["m_abs"] > 0.8
+    assert above["m_abs"] < 0.35
+    assert below["U4"] > above["U4"]
+
+
+def test_chain_driver_collects_timeseries():
+    cfg = sampler.ChainConfig(beta=0.6, n_sweeps=40, block_size=16)
+    key = jax.random.PRNGKey(1)
+    q = sampler.init_state(key, 32, 32)
+    final, ms, es = sampler.run_chain(q, key, cfg)
+    assert ms.shape == (40,) and es.shape == (40,)
+    assert bool(jnp.all(jnp.isfinite(ms))) and bool(jnp.all(jnp.isfinite(es)))
+    assert final.shape == q.shape
+
+
+def _example(args, timeout=900):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, cwd=str(REPO), env=env, timeout=timeout)
+
+
+def test_quickstart_example_runs():
+    p = _example(["examples/quickstart.py", "--size", "64",
+                  "--sweeps", "30"])
+    assert p.returncode == 0, p.stderr
+    assert "magnetization" in p.stdout.lower()
+
+
+def test_train_example_runs_and_learns():
+    p = _example(["examples/train_lm.py", "--arch", "qwen3-0.6b",
+                  "--steps", "25", "--tiny", "--batch", "8", "--seq", "16"])
+    assert p.returncode == 0, p.stderr
+    assert "loss improved" in p.stdout
+
+
+def test_serve_example_runs():
+    p = _example(["examples/serve_lm.py", "--arch", "qwen3-0.6b", "--tiny",
+                  "--batch", "2", "--new-tokens", "8"])
+    assert p.returncode == 0, p.stderr
+    assert "generated" in p.stdout.lower()
+
+
+def test_phase_transition_example_runs():
+    p = _example(["examples/phase_transition.py", "--size", "32",
+                  "--sweeps", "150", "--burnin", "50", "--points", "3"])
+    assert p.returncode == 0, p.stderr
+    assert "U4" in p.stdout
+
+
+def test_multipod_ising_example_runs():
+    p = _example(["examples/multipod_ising.py", "--devices", "4",
+                  "--mesh", "2,2", "--sweeps", "10", "--block-size", "16"])
+    assert p.returncode == 0, p.stderr
+    assert "flips/ns" in p.stdout
+
+
+def test_ising3d_example_runs():
+    p = _example(["examples/ising3d_demo.py", "--size", "10",
+                  "--sweeps", "20"])
+    assert p.returncode == 0, p.stderr
+    assert "ordered" in p.stdout
