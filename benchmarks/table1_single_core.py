@@ -1,5 +1,8 @@
 """Paper Table 1: single-core throughput (flips/ns) vs lattice size.
 
+All backends run through :class:`repro.api.IsingEngine` (measurement-free
+sweep loop — the paper's Tables 1-2 measure pure sweep throughput).
+
 The container has no TPU, so absolute flips/ns are host-CPU numbers — the
 meaningful outputs are (a) the *relative* scaling across lattice sizes (the
 paper's "larger lattices amortize better" effect), and (b) the projected
@@ -17,28 +20,23 @@ from benchmarks.common import emit, time_fn
 
 
 def run(sizes_blocks=(2, 4, 8, 16), block_size=128, n_sweeps=5,
-        dtype="bfloat16", backend="xla"):
+        dtype="bfloat16", backend="xla", pipeline="paper"):
     import jax
-    import jax.numpy as jnp
-    from repro.core import lattice as L
-    from repro.core import sampler
-    from repro.kernels import ops as kops
+
+    from repro.api import EngineConfig, IsingEngine
 
     key = jax.random.PRNGKey(0)
     rows = []
     for blocks in sizes_blocks:
         size = blocks * block_size
-        quads = sampler.init_state(key, size, size)
-        if backend == "xla":
-            cfg = sampler.ChainConfig(beta=0.4406868, n_sweeps=n_sweeps,
-                                      block_size=block_size, dtype=dtype,
-                                      prob_dtype="bfloat16")
-            sec = time_fn(lambda q: sampler.run_sweeps(q, key, cfg), quads)
-        else:
-            sec = time_fn(
-                lambda q: kops.run_sweeps(q, key, n_sweeps=n_sweeps,
-                                          beta=0.4406868, bs=block_size,
-                                          backend=backend), quads)
+        engine = IsingEngine(EngineConfig(
+            size=size, beta=0.4406868, n_sweeps=n_sweeps,
+            block_size=block_size, dtype=dtype, backend=backend,
+            pipeline=pipeline, measure=False,
+            prob_dtype=("bfloat16" if backend == "xla" else "float32"),
+            hot=True))
+        quads = engine.init(key)
+        sec = time_fn(lambda q: engine.run(q, key).state, quads)
         flips_ns = n_sweeps * size * size / (sec * 1e9)
         rows.append((size, sec, flips_ns))
         emit(f"table1_{backend}_{size}x{size}", sec / n_sweeps,
@@ -55,10 +53,11 @@ def main():
     ap.add_argument("--paper-scale", action="store_true",
                     help="paper's real sizes (needs a TPU-class host)")
     ap.add_argument("--backend", default="xla",
-                    choices=["xla", "pallas", "ref"])
+                    choices=["xla", "pallas", "pallas_lines", "ref"])
+    ap.add_argument("--pipeline", default="paper", choices=["paper", "opt"])
     args = ap.parse_args()
     sizes = (20, 40, 80, 160, 320, 640) if args.paper_scale else (2, 4, 8, 16)
-    run(sizes_blocks=sizes, backend=args.backend)
+    run(sizes_blocks=sizes, backend=args.backend, pipeline=args.pipeline)
     return 0
 
 

@@ -3,6 +3,7 @@
 
 The checkerboard update generalizes per paper §3.1; in-plane neighbour sums
 stay on the MXU (batched K-matmuls per depth slice), depth neighbours roll.
+Runs through `IsingEngine` with ``dims=3``.
 
     PYTHONPATH=src python examples/ising3d_demo.py --size 24 --sweeps 100
 """
@@ -10,9 +11,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import ising3d as I3
+from repro.api import EngineConfig, IsingEngine
+from repro.core.ising3d import BETA_C_3D
 
 
 def main():
@@ -24,24 +25,26 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    beta = args.beta_ratio * I3.BETA_C_3D
+    beta = args.beta_ratio * BETA_C_3D
     n = args.size
-    key = jax.random.PRNGKey(args.seed)
     # cold start in the ordered phase, hot in the disordered one (domain
-    # coarsening from a hot start takes far more sweeps than a demo runs)
-    full = (I3.cold_lattice3d(n, n, n) if args.beta_ratio > 1
-            else I3.random_lattice3d(key, n, n, n))
+    # coarsening from a hot start takes far more sweeps than a demo runs) —
+    # exactly the engine's hot=None auto rule.
+    engine = IsingEngine(EngineConfig(size=n, beta=beta, dims=3,
+                                      n_sweeps=args.sweeps))
     print(f"3-D lattice {n}^3  beta={beta:.5f} "
-          f"(beta_c={I3.BETA_C_3D:.5f}, ratio {args.beta_ratio})")
+          f"(beta_c={BETA_C_3D:.5f}, ratio {args.beta_ratio})")
 
+    key = jax.random.PRNGKey(args.seed)
+    state = engine.init(key)
     t0 = time.perf_counter()
-    final, ms = jax.jit(
-        lambda f, k: I3.run_sweeps3d(f, k, args.sweeps, beta))(full, key)
-    ms.block_until_ready()
+    result = engine.run(state, key)
+    result.magnetization.block_until_ready()
     dt = time.perf_counter() - t0
     spins = n ** 3
     print(f"{args.sweeps} sweeps in {dt:.2f}s "
           f"({args.sweeps * spins / dt / 1e9:.4f} flips/ns on this host)")
+    ms = result.magnetization
     for i in range(0, args.sweeps, max(1, args.sweeps // 8)):
         print(f"  sweep {i:4d}  m = {float(ms[i]):+.4f}")
     print(f"final |m| = {abs(float(ms[-1])):.4f} "

@@ -1,9 +1,9 @@
 #!/usr/bin/env python
 """Quickstart: simulate a 2-D Ising lattice at the critical temperature.
 
-Runs the paper's compact checkerboard algorithm (Algorithm 2) on whatever
-device JAX finds (CPU here, TPU in production) and prints the magnetization
-trace.
+One `IsingEngine` call runs the paper's compact checkerboard algorithm
+(Algorithm 2) on whatever device JAX finds (CPU here, TPU in production)
+and streams the magnetization/energy trace.
 
     PYTHONPATH=src python examples/quickstart.py --size 512 --sweeps 200
 """
@@ -12,8 +12,8 @@ import time
 
 import jax
 
+from repro.api import EngineConfig, IsingEngine
 from repro.core import observables as obs
-from repro.core import sampler
 
 
 def main():
@@ -25,31 +25,35 @@ def main():
                     help="T (default: the critical temperature T_c)")
     ap.add_argument("--dtype", default="bfloat16",
                     choices=["bfloat16", "float32"])
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "pallas_lines", "ref"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     t = args.temperature or obs.critical_temperature()
-    block = min(128, args.size // 2)
-    cfg = sampler.ChainConfig(beta=1.0 / t, n_sweeps=args.sweeps,
-                              block_size=block, dtype=args.dtype)
-    key = jax.random.PRNGKey(args.seed)
-    quads = sampler.init_state(key, args.size, args.size, hot=True)
+    engine = IsingEngine(EngineConfig(
+        size=args.size, beta=1.0 / t, n_sweeps=args.sweeps,
+        dtype=args.dtype, backend=args.backend, hot=True))
 
     print(f"lattice {args.size}x{args.size}  T={t:.4f}  "
-          f"(T_c={obs.critical_temperature():.4f})  dtype={args.dtype}")
+          f"(T_c={obs.critical_temperature():.4f})  dtype={args.dtype}  "
+          f"backend={args.backend}")
+    key = jax.random.PRNGKey(args.seed)
+    state = engine.init(key)
     t0 = time.perf_counter()
-    final, ms, es = sampler.run_chain(quads, key, cfg)
-    ms.block_until_ready()
+    result = engine.run(state, key)
+    result.magnetization.block_until_ready()
     dt = time.perf_counter() - t0
 
     spins = args.size * args.size
     flips_ns = args.sweeps * spins / (dt * 1e9)
     print(f"{args.sweeps} sweeps in {dt:.2f}s  "
           f"({flips_ns:.4f} flips/ns on this host)")
+    ms, es = result.magnetization, result.energy
     for i in range(0, args.sweeps, max(1, args.sweeps // 10)):
         print(f"  sweep {i:5d}  magnetization {float(ms[i]):+.4f}  "
               f"energy/spin {float(es[i]):+.4f}")
-    print(f"final magnetization {float(obs.magnetization(final)):+.4f}")
+    print(f"final magnetization {engine.magnetization(result.state):+.4f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Public API: the single front door for every Ising simulation scenario.
+
+    from repro.api import IsingEngine, EngineConfig
+
+    engine = IsingEngine(EngineConfig(size=256, beta=0.44))
+    result = engine.simulate(seed=0)
+
+See :mod:`repro.api.engine` for the full dispatch matrix (backend x
+topology x dimensionality x pipeline x ensemble).
+"""
+from repro.api.engine import (EngineConfig, EngineResult, IsingEngine,
+                              beta_ladder)
+
+__all__ = ["IsingEngine", "EngineConfig", "EngineResult", "beta_ladder"]

@@ -1,0 +1,611 @@
+"""`IsingEngine`: one config-driven front door for every simulation scenario.
+
+The paper's point is that a single small program drives the full distributed
+checkerboard simulation; this module is that program's API. One
+:class:`EngineConfig` selects across four orthogonal axes:
+
+==============  =====================================================
+axis            values
+==============  =====================================================
+backend         ``xla`` (Algorithm 2 in pure jnp, the paper-faithful
+                path), ``pallas`` / ``pallas_lines`` / ``ref`` (the
+                fused kernel stack in :mod:`repro.kernels`)
+topology        ``single`` (one device) or ``mesh`` (spatial domain
+                decomposition + halo exchange via
+                :mod:`repro.distributed.ising`)
+dims            2 (checkerboard quads) or 3 (:mod:`repro.core.ising3d`)
+pipeline        ``paper`` (f32 uniforms + float acceptance) or ``opt``
+                (integer-threshold acceptance, rbg-capable RNG — the
+                beyond-paper fast path in ``distributed.ising``)
+==============  =====================================================
+
+plus the ensemble axis, which is the genuinely new capability: setting
+``betas`` (instead of scalar ``beta``) runs R independent replicas at
+distinct temperatures in ONE jitted program — ``vmap`` over the replica
+axis with per-sweep fused observable streaming (magnetization + energy
+accumulated inside the compiled scan, never materializing lattices on the
+host), so a phase-diagram scan is one engine call instead of a Python loop
+over temperatures. On a mesh, replicas are sharded over the mesh axes
+(``replica_axes``) — the natural use of a pod that is larger than one
+lattice's decomposition needs. ``ensemble="tempering"`` swaps configurations
+between adjacent replicas (parallel tempering, :mod:`repro.core.tempering`).
+
+RNG contract (what makes the dispatch testable): replica ``i`` of an
+ensemble run with chain key ``k`` evolves bitwise-identically to a
+single-chain run with key ``fold_in(k, i)``; the single-device scalar-β XLA
+path is bitwise-identical to calling :func:`repro.core.sampler.run_chain`
+directly. Tests in ``tests/test_engine.py`` pin both.
+
+The low-level modules stay importable for power users — the engine only
+dispatches; it does not fork the math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import checkerboard as cb
+from repro.core import ising3d as I3
+from repro.core import lattice as L
+from repro.core import observables as obs
+from repro.core import sampler
+from repro.core import tempering as pt
+
+_BACKENDS = ("xla", "pallas", "pallas_lines", "ref")
+_TOPOLOGIES = ("single", "mesh")
+_PIPELINES = ("paper", "opt")
+_ENSEMBLES = ("independent", "tempering")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything the engine needs to pick a compiled program.
+
+    Exactly one of ``beta`` (single chain) / ``betas`` (replica ensemble)
+    must be set. ``size`` is the lattice side: an even [size, size] torus in
+    2-D, a [size, size, size] cube in 3-D.
+    """
+    size: int
+    width: int = 0                     # 2-D lattice width; 0 -> size (square)
+    beta: Optional[float] = None       # None = unset (beta=0.0 is legal)
+    betas: tuple = ()
+    n_sweeps: int = 100
+
+    dims: int = 2                      # 2 | 3
+    backend: str = "xla"               # xla | pallas | pallas_lines | ref
+    topology: str = "single"           # single | mesh
+    pipeline: str = "paper"            # paper | opt
+    ensemble: str = "independent"      # independent | tempering
+
+    mesh_shape: tuple = ()             # e.g. (2, 2); mesh topology only
+    mesh_axes: tuple = ("data", "model")
+    replica_axes: tuple = ("data",)    # ensemble sharding axes on a mesh
+
+    exchange_every: int = 5            # tempering swap cadence (sweeps)
+    accept: str = "lut"                # lut | exp
+    dtype: str = "bfloat16"
+    prob_dtype: str = "float32"
+    block_size: int = 0                # 0 -> min(128, size // 2)
+    interpret: Optional[bool] = None   # Pallas interpret mode; None -> auto
+                                       # (False on TPU, True elsewhere)
+    measure: bool = True               # stream per-sweep (m, E)
+    field: float = 0.0                 # external field h (2-D xla only)
+    hot: Optional[bool] = None         # None -> hot above Tc, cold below
+
+    def resolved_width(self) -> int:
+        return self.width or self.size
+
+    def resolved_block_size(self) -> int:
+        return self.block_size or min(L.MXU_BLOCK,
+                                      min(self.size, self.resolved_width())
+                                      // 2)
+
+    def n_replicas(self) -> int:
+        return len(self.betas)
+
+    def validate(self) -> None:
+        err = _config_error
+        if (self.beta is None) == (not self.betas):
+            err("set exactly one of beta (single chain) or betas "
+                f"(replica ensemble); got beta={self.beta!r} "
+                f"betas={self.betas!r}")
+        if self.dims not in (2, 3):
+            err(f"dims must be 2 or 3, got {self.dims}")
+        if self.backend not in _BACKENDS:
+            err(f"backend must be one of {_BACKENDS}, got {self.backend!r}")
+        if self.topology not in _TOPOLOGIES:
+            err(f"topology must be one of {_TOPOLOGIES}, "
+                f"got {self.topology!r}")
+        if self.pipeline not in _PIPELINES:
+            err(f"pipeline must be one of {_PIPELINES}, "
+                f"got {self.pipeline!r}")
+        if self.ensemble not in _ENSEMBLES:
+            err(f"ensemble must be one of {_ENSEMBLES}, "
+                f"got {self.ensemble!r}")
+        if self.dims == 3:
+            if self.backend != "xla":
+                err("3-D supports only backend='xla' (the kernel stack is "
+                    "2-D); got " + repr(self.backend))
+            if self.topology != "single":
+                err("3-D domain decomposition is not implemented; use "
+                    "topology='single'")
+            if self.pipeline != "paper" or self.ensemble != "independent":
+                err("3-D supports pipeline='paper', ensemble='independent'")
+            if self.field:
+                err("3-D external field is not implemented")
+            if self.width:
+                err("3-D lattices are cubic; width applies to 2-D only")
+        else:
+            w = self.resolved_width()
+            if self.size % 2 or w % 2:
+                err(f"2-D lattice dims must be even, got "
+                    f"{self.size}x{w}")
+            bs = self.resolved_block_size()
+            if (self.size // 2) % bs or (w // 2) % bs:
+                err(f"half-lattice {self.size // 2}x{w // 2} must be "
+                    f"divisible by block_size {bs}")
+        if self.ensemble == "tempering":
+            if not self.betas:
+                err("ensemble='tempering' needs a betas ladder")
+            if (self.topology, self.backend, self.pipeline) != \
+                    ("single", "xla", "paper"):
+                err("tempering runs on topology='single', backend='xla', "
+                    "pipeline='paper'")
+            if not self.measure:
+                err("tempering always measures (swap decisions need "
+                    "energies); set measure=True")
+            if self.field:
+                err("tempering samples the h=0 Hamiltonian "
+                    "(core.tempering has no field term); field must be 0")
+        if self.pipeline == "opt":
+            if self.accept != "lut":
+                err("pipeline='opt' uses the exact integer-threshold LUT; "
+                    "accept must be 'lut'")
+            if self.field:
+                err("pipeline='opt' requires field=0 (the field term "
+                    "forces float acceptance)")
+            if self.betas:
+                err("pipeline='opt' ensembles are not implemented; use "
+                    "pipeline='paper' for multi-beta runs")
+            if self.backend not in ("xla", "pallas_lines"):
+                err("pipeline='opt' runs on backend='xla' or "
+                    f"'pallas_lines'; got {self.backend!r}")
+            if self.measure:
+                err("pipeline='opt' is the measurement-free throughput "
+                    "path; set measure=False and compute observables "
+                    "from the returned state")
+        if self.backend in ("pallas", "pallas_lines", "ref"):
+            if self.field:
+                err(f"backend={self.backend!r} requires field=0 (the "
+                    "kernel bakes the 5-entry LUT)")
+            if self.accept != "lut":
+                err(f"backend={self.backend!r} uses the in-kernel LUT; "
+                    "accept must be 'lut'")
+            if self.betas:
+                err(f"backend={self.backend!r} ensembles are not "
+                    "implemented; use backend='xla' for multi-beta runs")
+        if self.topology == "mesh":
+            if not self.mesh_shape:
+                err("topology='mesh' needs mesh_shape, e.g. (2, 2)")
+            if len(self.mesh_axes) < 2:
+                err("mesh_axes needs at least (row_axis, col_axis); "
+                    f"got {self.mesh_axes}")
+            if len(self.mesh_shape) != len(self.mesh_axes):
+                err(f"mesh_shape {self.mesh_shape} and mesh_axes "
+                    f"{self.mesh_axes} must have equal length")
+            if self.backend in ("pallas", "ref"):
+                err("mesh topology supports backend='xla' (GSPMD/shard_map)"
+                    " or 'pallas_lines' (edge-line halo); "
+                    f"got {self.backend!r}")
+            if self.measure and not self.betas:
+                err("mesh scalar-beta runs are measurement-free (the "
+                    "paper's throughput loop); set measure=False and use "
+                    "IsingEngine.magnetization for logging")
+            if self.field:
+                err("mesh topology requires field=0")
+
+
+class EngineConfigError(ValueError):
+    """Raised for invalid EngineConfig combinations (clear, actionable)."""
+
+
+def _config_error(msg: str):
+    raise EngineConfigError(f"invalid EngineConfig: {msg}")
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """What a run hands back.
+
+    state:          final lattice state (layout depends on the scenario —
+                    quads [4, R, C], replicas [Rr, 4, R, C], blocked
+                    [4, MR, MC, bs, bs] on a mesh, or [D, H, W] in 3-D)
+    magnetization:  per-sweep m, shape [T] or [n_replicas, T] (None when
+                    measure=False)
+    energy:         per-sweep E/spin, same shape (None when unmeasured)
+    extra:          scenario extras (tempering swap fraction, betas, ...)
+    """
+    state: jax.Array
+    magnetization: Optional[jax.Array] = None
+    energy: Optional[jax.Array] = None
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+def beta_ladder(t_over_tc_min: float, t_over_tc_max: float, n: int,
+                dims: int = 2) -> tuple:
+    """n inverse temperatures spanning [t_min, t_max] x Tc, coldest-first
+    temperature order (descending beta ladder ends hottest)."""
+    tc = (obs.critical_temperature() if dims == 2 else 1.0 / I3.BETA_C_3D)
+    if n == 1:
+        return (1.0 / (t_over_tc_min * tc),)
+    step = (t_over_tc_max - t_over_tc_min) / (n - 1)
+    return tuple(1.0 / ((t_over_tc_min + i * step) * tc) for i in range(n))
+
+
+class IsingEngine:
+    """Config-driven dispatcher over every sampler in the repo.
+
+    Usage::
+
+        engine = IsingEngine(EngineConfig(size=256, beta=0.44, n_sweeps=100))
+        state = engine.init(jax.random.PRNGKey(0))
+        result = engine.run(state, jax.random.PRNGKey(1))
+
+    or in one line: ``result = engine.simulate(seed=0)`` (splits the seed
+    into independent init / chain keys).
+    """
+
+    def __init__(self, cfg: EngineConfig, mesh=None):
+        cfg.validate()
+        self.cfg = cfg
+        self._runner_cache: dict = {}
+        self.mesh = mesh
+        if mesh is None and (cfg.topology == "mesh"
+                             or (cfg.pipeline == "opt"
+                                 and cfg.topology == "single")):
+            shape = cfg.mesh_shape or (1,) * len(cfg.mesh_axes)
+            self.mesh = compat.make_mesh(shape, cfg.mesh_axes)
+        if self.mesh is not None and cfg.topology == "mesh":
+            if cfg.betas:
+                n_shards = 1
+                for a in cfg.replica_axes:
+                    n_shards *= self.mesh.shape[a]
+                if cfg.n_replicas() % n_shards:
+                    _config_error(
+                        f"{cfg.n_replicas()} replicas cannot shard evenly "
+                        f"over replica_axes {cfg.replica_axes} "
+                        f"(size {n_shards}); pad the betas ladder or "
+                        "change replica_axes")
+            else:
+                from repro.distributed import halo
+                dcfg = self._dist_cfg()
+                bs = cfg.resolved_block_size()
+                mr, mc = cfg.size // 2 // bs, cfg.resolved_width() // 2 // bs
+                nrows = halo.axis_size(self.mesh, dcfg.row_axes)
+                ncols = halo.axis_size(self.mesh, dcfg.col_axes)
+                if mr % nrows or mc % ncols:
+                    _config_error(
+                        f"blocked lattice grid {mr}x{mc} (block_size {bs}) "
+                        f"does not tile the {nrows}x{ncols} device grid; "
+                        "adjust size/width or block_size")
+
+    # ------------------------------------------------------------------
+    # Scenario predicates
+    # ------------------------------------------------------------------
+
+    @property
+    def is_ensemble(self) -> bool:
+        return bool(self.cfg.betas)
+
+    def _scenario(self) -> str:
+        c = self.cfg
+        if c.dims == 3:
+            return "3d"
+        if c.ensemble == "tempering":
+            return "tempering"
+        if c.topology == "mesh" and not c.betas:
+            return "mesh"
+        if c.pipeline == "opt":
+            return "opt"
+        if c.betas:
+            return "ensemble"
+        if c.backend != "xla":
+            return "kernel"
+        return "chain"
+
+    # ------------------------------------------------------------------
+    # Geometry / distributed plumbing
+    # ------------------------------------------------------------------
+
+    def _dist_cfg(self):
+        from repro.distributed import ising as dising
+        c = self.cfg
+        row_axes = (c.mesh_axes[:-1] or c.mesh_axes) if self.mesh else ("data",)
+        col_axes = (c.mesh_axes[-1],) if self.mesh else ("model",)
+        return dising.DistIsingConfig(
+            beta=c.beta, block_size=c.resolved_block_size(),
+            row_axes=row_axes, col_axes=col_axes, accept=c.accept,
+            backend=("pallas_lines" if c.backend == "pallas_lines"
+                     else "xla"),
+            prob_dtype=c.prob_dtype, pipeline=c.pipeline)
+
+    def lattice_sharding(self):
+        """NamedSharding of the blocked mesh state [4, MR, MC, bs, bs]."""
+        from repro.distributed import ising as dising
+        return dising.lattice_sharding(self.mesh, self._dist_cfg())
+
+    def _chain_cfg(self, beta=None) -> sampler.ChainConfig:
+        c = self.cfg
+        return sampler.ChainConfig(
+            beta=(c.beta if beta is None else beta), n_sweeps=c.n_sweeps,
+            block_size=c.resolved_block_size(), accept=c.accept,
+            dtype=c.dtype, prob_dtype=c.prob_dtype, measure=c.measure,
+            field=c.field)
+
+    # ------------------------------------------------------------------
+    # State initialization
+    # ------------------------------------------------------------------
+
+    def _auto_hot(self, beta: float) -> bool:
+        if self.cfg.hot is not None:
+            return self.cfg.hot
+        beta_c = (I3.BETA_C_3D if self.cfg.dims == 3
+                  else 1.0 / obs.critical_temperature())
+        return beta < beta_c  # hot start in the disordered phase
+
+    def init(self, key: jax.Array) -> jax.Array:
+        """Initial state for this scenario (see EngineResult for layouts).
+
+        Ensembles: replica i is initialized from ``fold_in(key, i)`` —
+        matching the chain-key contract, so a sequential rerun of one
+        replica reproduces it end to end. Hot/cold starts resolve per
+        replica when ``hot=None`` (hot above Tc, cold below — the standard
+        burn-in trick on both sides of the transition).
+        """
+        c = self.cfg
+        dt = jnp.dtype(c.dtype)
+        scen = self._scenario()
+        if scen == "3d":
+            n = c.size
+            if self._auto_hot(c.beta):
+                return I3.random_lattice3d(key, n, n, n, dt)
+            return I3.cold_lattice3d(n, n, n, dt)
+        if scen in ("ensemble", "tempering"):
+            states = [
+                sampler.init_state(jax.random.fold_in(key, i), c.size,
+                                   c.resolved_width(), dt,
+                                   hot=self._auto_hot(b))
+                for i, b in enumerate(c.betas)]
+            state = jnp.stack(states)
+            if self.mesh is not None and c.topology == "mesh":
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                state = jax.device_put(state, NamedSharding(
+                    self.mesh, P(c.replica_axes, None, None, None)))
+            return state
+        if scen in ("mesh", "opt"):
+            w = c.resolved_width()
+            full = (L.random_lattice(key, c.size, w, dt)
+                    if self._auto_hot(c.beta) else L.cold_lattice(c.size, w, dt))
+            quads = L.to_quads(full)
+            bs = c.resolved_block_size()
+            qb = jnp.stack([L.block(quads[i], bs) for i in range(4)])
+            return jax.device_put(qb, self.lattice_sharding())
+        return sampler.init_state(key, c.size, c.resolved_width(), dt,
+                                  hot=self._auto_hot(c.beta))
+
+    # ------------------------------------------------------------------
+    # Compiled runners (cached per engine)
+    # ------------------------------------------------------------------
+
+    def _ensemble_runner(self):
+        """Jitted R-replica multi-β chain: vmap over replicas, scan over
+        sweeps, observables fused into the compiled loop."""
+        c = self.cfg
+        betas = jnp.asarray(c.betas, jnp.float32)
+        bs = c.resolved_block_size()
+        pdt = jnp.dtype(c.prob_dtype)
+        n_rep = c.n_replicas()
+
+        def one_sweep(q, k, beta, step):
+            probs = sampler.sweep_probs(k, step, q.shape[1:], pdt)
+            return cb.sweep_compact(q, probs, beta, bs, c.accept,
+                                    field=c.field)
+
+        def run(state, key):
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(n_rep))
+
+            if not c.measure:
+                def body(step, s):
+                    return jax.vmap(one_sweep, in_axes=(0, 0, 0, None))(
+                        s, keys, betas, step)
+                final = jax.lax.fori_loop(0, c.n_sweeps, body, state)
+                return final, None, None
+
+            def body(carry, step):
+                q = jax.vmap(one_sweep, in_axes=(0, 0, 0, None))(
+                    carry, keys, betas, step)
+                m = jax.vmap(obs.magnetization)(q)
+                e = jax.vmap(obs.energy_per_spin)(q)
+                return q, (m, e)
+
+            final, (ms, es) = jax.lax.scan(body, state,
+                                           jnp.arange(c.n_sweeps))
+            return final, ms.T, es.T  # [R, T]
+
+        return jax.jit(run)
+
+    def _kernel_runner(self):
+        """Pallas / ref backend chain (single device, scalar β)."""
+        from repro.kernels import ops as kops
+        c = self.cfg
+        bs = c.resolved_block_size()
+        interpret = (jax.default_backend() != "tpu" if c.interpret is None
+                     else c.interpret)
+
+        def run(state, key):
+            if not c.measure:
+                final = kops.run_sweeps(state, key, n_sweeps=c.n_sweeps,
+                                        beta=c.beta, bs=bs,
+                                        backend=c.backend,
+                                        interpret=interpret)
+                return final, None, None
+
+            def body(carry, step):
+                qb = carry
+                for color in (0, 1):
+                    bits = kops.color_bits(key, step, color, qb.shape[1:])
+                    qb = kops.update_color(qb, bits, c.beta, color,
+                                           backend=c.backend,
+                                           interpret=interpret)
+                quads = kops._unblock_quads(qb)
+                return qb, (obs.magnetization(quads),
+                            obs.energy_per_spin(quads))
+
+            qb0 = kops._block_quads(state, bs)
+            qb, (ms, es) = jax.lax.scan(body, qb0, jnp.arange(c.n_sweeps))
+            return kops._unblock_quads(qb), ms, es
+
+        return jax.jit(run)
+
+    def _opt_runner(self):
+        """Beyond-paper integer-threshold pipeline via distributed.ising
+        (trivial 1-device mesh when topology='single')."""
+        from repro.distributed import ising as dising
+        runner = dising.make_run_sweeps_fn(self.mesh, self._dist_cfg(),
+                                           self.cfg.n_sweeps)
+        return lambda state, key: (runner(state, key), None, None)
+
+    def _mesh_runner(self, n_sweeps: int):
+        from repro.distributed import ising as dising
+        key_ = ("mesh", n_sweeps)
+        if key_ not in self._runner_cache:
+            self._runner_cache[key_] = dising.make_run_sweeps_fn(
+                self.mesh, self._dist_cfg(), n_sweeps)
+        return self._runner_cache[key_]
+
+    def _runner_3d(self):
+        c = self.cfg
+
+        def run(state, key):
+            if not c.measure:
+                def body(i, f):
+                    return I3.sweep3d(f, key, i, c.beta)
+                return (jax.lax.fori_loop(0, c.n_sweeps, body, state),
+                        None, None)
+
+            def body(carry, step):
+                f = I3.sweep3d(carry, key, step, c.beta)
+                return f, (jnp.mean(f.astype(jnp.float32)),
+                           obs.energy_per_spin3d(f))
+
+            final, (ms, es) = jax.lax.scan(body, state,
+                                           jnp.arange(c.n_sweeps))
+            return final, ms, es
+
+        return jax.jit(run)
+
+    # ------------------------------------------------------------------
+    # Public entry points
+    # ------------------------------------------------------------------
+
+    def run(self, state: jax.Array, key: jax.Array) -> EngineResult:
+        """Advance ``state`` by ``cfg.n_sweeps`` sweeps under chain ``key``.
+
+        Single-chain XLA runs are bitwise-identical to
+        :func:`repro.core.sampler.run_chain`; ensemble replica i is
+        bitwise-identical to a single run keyed ``fold_in(key, i)``.
+        """
+        c = self.cfg
+        scen = self._scenario()
+        if scen == "tempering":
+            return self._run_tempering(state, key)
+        if scen == "chain":
+            if c.measure:
+                final, ms, es = sampler.run_chain(state, key,
+                                                  self._chain_cfg())
+                return EngineResult(final, ms, es)
+            return EngineResult(sampler.run_sweeps(state, key,
+                                                   self._chain_cfg()))
+        if scen == "mesh":
+            return EngineResult(self._mesh_runner(c.n_sweeps)(state, key))
+        runner_key = scen
+        if runner_key not in self._runner_cache:
+            self._runner_cache[runner_key] = {
+                "ensemble": self._ensemble_runner,
+                "kernel": self._kernel_runner,
+                "opt": self._opt_runner,
+                "3d": self._runner_3d,
+            }[scen]()
+        final, ms, es = self._runner_cache[runner_key](state, key)
+        extra = {"betas": c.betas} if scen == "ensemble" else {}
+        return EngineResult(final, ms, es, extra)
+
+    def _run_tempering(self, state: jax.Array,
+                       key: jax.Array) -> EngineResult:
+        c = self.cfg
+        if c.n_sweeps % c.exchange_every:
+            _config_error(f"n_sweeps={c.n_sweeps} must be a multiple of "
+                          f"exchange_every={c.exchange_every} for tempering")
+        tcfg = pt.TemperingConfig(
+            betas=c.betas, n_rounds=c.n_sweeps // c.exchange_every,
+            exchange_every=c.exchange_every,
+            block_size=c.resolved_block_size(), accept=c.accept,
+            dtype=c.dtype)
+        final, ms, frac = pt.run_tempering(key, c.size, tcfg,
+                                           init_replicas=state)
+        return EngineResult(final, ms.T, None,
+                            {"swap_fraction": frac, "betas": c.betas})
+
+    def run_sweeps(self, state: jax.Array, key: jax.Array,
+                   n_sweeps: int) -> jax.Array:
+        """Measurement-free chunk of the mesh scenario (checkpoint cadence
+        in ``repro.launch.simulate``); returns only the new state."""
+        if self._scenario() != "mesh":
+            _config_error("run_sweeps(n_sweeps=...) is the chunked mesh "
+                          "runner; use run() elsewhere")
+        return self._mesh_runner(n_sweeps)(state, key)
+
+    def simulate(self, seed: int = 0) -> EngineResult:
+        """One-call convenience: split seed into init/chain keys and run."""
+        k_init, k_chain = jax.random.split(jax.random.PRNGKey(seed))
+        return self.run(self.init(k_init), k_chain)
+
+    def magnetization(self, state: jax.Array) -> float:
+        """Global mean spin of any engine state layout (host scalar)."""
+        return float(jnp.mean(state.astype(jnp.float32)))
+
+    def phase_curve(self, key: jax.Array, burnin: int = 0,
+                    full_stats: bool = False) -> list:
+        """Phase-diagram scan: run the β ensemble once, reduce each
+        replica's fused (m, E) streams to the paper's Fig.-4 statistics.
+        Replaces the per-temperature Python loop of ``measure_curve`` with
+        one compiled multi-β program.
+
+        ``full_stats=True`` adds susceptibility, specific heat, and the
+        integrated autocorrelation time — tau costs a host-side loop of
+        device syncs per replica, so it is opt-in.
+        """
+        c = self.cfg
+        if not self.is_ensemble or c.ensemble != "independent":
+            _config_error("phase_curve needs an independent-replica betas "
+                          "ensemble")
+        k_init, k_chain = jax.random.split(key)
+        res = self.run(self.init(k_init), k_chain)
+        rows = []
+        n_spins = (c.size ** 3 if c.dims == 3
+                   else c.size * c.resolved_width())
+        for i, beta in enumerate(c.betas):
+            stats = obs.chain_statistics(
+                res.magnetization[i], res.energy[i], burnin,
+                beta=(beta if full_stats else 0.0),
+                n_spins=(n_spins if full_stats else 0))
+            stats["T"] = 1.0 / beta
+            stats["beta"] = beta
+            stats["size"] = c.size
+            rows.append(stats)
+        return rows

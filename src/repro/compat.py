@@ -1,0 +1,63 @@
+"""Version-compatibility shims for jax API drift.
+
+``shard_map`` moved twice across jax releases:
+
+* jax >= 0.6        — ``jax.shard_map`` with a ``check_vma`` kwarg
+* 0.4.x .. 0.5.x    — ``jax.experimental.shard_map.shard_map`` with the
+                      older ``check_rep`` kwarg (same meaning)
+
+Every module in this repo imports :func:`shard_map` from here instead of
+from jax directly, so the repo runs unmodified on either side of the move.
+The shim normalizes the kwarg: callers always pass ``check_vma=...`` and we
+translate to ``check_rep`` when the experimental API is the one available.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-0.6: experimental location, check_rep instead of check_vma
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    @functools.wraps(_exp_shard_map)
+    def shard_map(f=None, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if f is None:
+            return functools.partial(shard_map, **kwargs)
+        return _exp_shard_map(f, **kwargs)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """``jax.make_mesh`` with Auto axis types where the API supports them.
+
+    ``axis_types`` / ``jax.sharding.AxisType`` only exist on newer jax; on
+    older versions every axis is implicitly Auto, so omitting the kwarg is
+    semantically identical.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape: tuple, axes: tuple):
+    """Device-free ``jax.sharding.AbstractMesh`` across its API change.
+
+    Newer jax takes ``AbstractMesh(shape, axis_names)``; older versions take
+    a single ``((name, size), ...)`` tuple.
+    """
+    import inspect
+
+    from jax.sharding import AbstractMesh
+    params = inspect.signature(AbstractMesh.__init__).parameters
+    if "axis_names" in params or len(params) > 3:
+        return AbstractMesh(shape, axes)
+    return AbstractMesh(tuple(zip(axes, shape)))
+
+
+__all__ = ["shard_map", "make_mesh", "abstract_mesh"]

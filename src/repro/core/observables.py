@@ -20,6 +20,13 @@ def energy_per_spin(quads: jax.Array) -> jax.Array:
     return -jnp.mean(full * (right + down))
 
 
+def energy_per_spin3d(full: jax.Array) -> jax.Array:
+    """E/N for a [D, H, W] spin cube (J=1, each bond counted once)."""
+    f = full.astype(jnp.float32)
+    bonds = sum(jnp.roll(f, -1, axis) for axis in (0, 1, 2))
+    return -jnp.mean(f * bonds)
+
+
 def binder_parameter(m2: jax.Array, m4: jax.Array) -> jax.Array:
     """U4 = 1 - <m^4> / (3 <m^2>^2)  (paper §4.1)."""
     return 1.0 - m4 / (3.0 * m2 ** 2)

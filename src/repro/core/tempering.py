@@ -71,16 +71,20 @@ def _swap_round(quads_r, betas, key, parity, n_spins):
     return jnp.take(quads_r, perm, axis=0), accept
 
 
-def run_tempering(key: jax.Array, size: int, cfg: TemperingConfig):
+def run_tempering(key: jax.Array, size: int, cfg: TemperingConfig,
+                  init_replicas: jax.Array | None = None):
     """Returns (final replicas [R,4,r,c], |m| trace [rounds, R],
-    swap-acceptance fraction)."""
+    swap-acceptance fraction). ``init_replicas`` ([R, 4, r, c]) overrides
+    the default hot starts (the engine passes its own per-β states)."""
     betas = jnp.asarray(cfg.betas, jnp.float32)
     r = len(cfg.betas)
-    n_spins = size * size
-    qs = jnp.stack([
+    qs = init_replicas if init_replicas is not None else jnp.stack([
         sampler.init_state(jax.random.fold_in(key, 1000 + i), size, size,
                            jnp.dtype(cfg.dtype), hot=True)
         for i in range(r)])
+    # total-energy scale from the actual replica shape (init_replicas may
+    # be rectangular), not size^2 — the swap exponent depends on it
+    n_spins = qs.shape[1] * qs.shape[2] * qs.shape[3]
 
     def round_body(carry, round_i):
         quads_r, n_acc = carry

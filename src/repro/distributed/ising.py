@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import checkerboard as cb
 from repro.core import lattice as L
 from repro.distributed import halo
@@ -156,7 +157,7 @@ def make_sweep_fn(mesh, cfg: DistIsingConfig):
             quads = _local_color_update(quads, dkey, step, color, cfg, edges)
         return jnp.stack(quads)
 
-    mapped = jax.shard_map(local_sweep, mesh=mesh, check_vma=False,
+    mapped = shard_map(local_sweep, mesh=mesh, check_vma=False,
                            in_specs=(spec, P(), P()), out_specs=spec)
     return jax.jit(mapped, donate_argnums=(0,))
 
@@ -178,7 +179,7 @@ def make_sweep_tuple_fn(mesh, cfg: DistIsingConfig):
             quads = _local_color_update(quads, dkey, step, color, cfg, edges)
         return quads
 
-    mapped = jax.shard_map(local_sweep, mesh=mesh, check_vma=False,
+    mapped = shard_map(local_sweep, mesh=mesh, check_vma=False,
                            in_specs=(qspec,) * 4 + (P(), P()),
                            out_specs=(qspec,) * 4)
     return jax.jit(mapped, donate_argnums=(0, 1, 2, 3))
@@ -205,7 +206,7 @@ def make_run_sweeps_fn(mesh, cfg: DistIsingConfig, n_sweeps: int):
                                 tuple(qb[i] for i in range(4)))
         return jnp.stack(out)
 
-    mapped = jax.shard_map(local_run, mesh=mesh, check_vma=False,
+    mapped = shard_map(local_run, mesh=mesh, check_vma=False,
                            in_specs=(spec, P()), out_specs=spec)
     return jax.jit(mapped, donate_argnums=(0,))
 
@@ -227,7 +228,7 @@ def make_sweep_with_bits_fn(mesh, cfg: DistIsingConfig):
                                    edges=edges)
         return qb
 
-    mapped = jax.shard_map(local_sweep, mesh=mesh, check_vma=False,
+    mapped = shard_map(local_sweep, mesh=mesh, check_vma=False,
                            in_specs=(spec, bits_spec), out_specs=spec)
     return jax.jit(mapped)
 

@@ -1,7 +1,7 @@
 """Production Ising simulation launcher (the paper's Table 1/2 workload).
 
-Runs the compact checkerboard MCMC on a mesh with spatial domain
-decomposition + halo exchange, periodic magnetization logging, and
+A thin CLI over :class:`repro.api.IsingEngine`: mesh topology with spatial
+domain decomposition + halo exchange, periodic magnetization logging, and
 checkpointing of the lattice state (restart-safe long chains).
 
     # paper Table 2 rehearsal on 8 virtual devices:
@@ -25,6 +25,7 @@ def main(argv=None):
                     help="sweeps per compiled chunk (checkpoint cadence)")
     ap.add_argument("--temperature-ratio", type=float, default=1.0)
     ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--pipeline", default="paper", choices=["paper", "opt"])
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -35,30 +36,29 @@ def main(argv=None):
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
+    from repro.api import EngineConfig, IsingEngine
     from repro.checkpoint import ckpt
-    from repro.core import lattice as L
     from repro.core import observables as obs
-    from repro.distributed import ising as dising
     from repro.launch import mesh as mesh_lib
 
     shape = tuple(int(x) for x in args.mesh.split(","))
     axes = ("pod", "data", "model")[3 - len(shape):]
     mesh = mesh_lib.make_mesh(shape, axes)
-    row_axes = tuple(a for a in ("pod", "data") if a in mesh.shape) or axes[:1]
-
-    t = args.temperature_ratio * obs.critical_temperature()
-    cfg = dising.DistIsingConfig(
-        beta=1.0 / t, block_size=args.block_size, row_axes=row_axes,
-        col_axes=(axes[-1],), prob_dtype="bfloat16")
     nrows = 1
-    for a in row_axes:
+    for a in axes[:-1] or axes[:1]:
         nrows *= mesh.shape[a]
     ncols = mesh.shape[axes[-1]]
+    bs = args.block_size
     mr = args.blocks_per_device * nrows
     mc = args.blocks_per_device * ncols
-    bs = args.block_size
     h, w = 2 * mr * bs, 2 * mc * bs
+
+    t = args.temperature_ratio * obs.critical_temperature()
+    engine = IsingEngine(EngineConfig(
+        size=h, width=w, beta=1.0 / t, n_sweeps=args.chunk,
+        topology="mesh", mesh_shape=shape, mesh_axes=axes,
+        pipeline=args.pipeline, block_size=bs, dtype=args.dtype,
+        prob_dtype="bfloat16", measure=False, hot=True), mesh=mesh)
     print(f"[simulate] mesh={dict(mesh.shape)} lattice {h}x{w} "
           f"({h*w/1e6:.1f}M spins) T/Tc={args.temperature_ratio} "
           f"dtype={args.dtype}")
@@ -68,31 +68,23 @@ def main(argv=None):
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         start_sweep = ckpt.latest_step(args.ckpt_dir)
         like = {"qb": jnp.zeros((4, mr, mc, bs, bs), jnp.dtype(args.dtype))}
-        sh = {"qb": dising.lattice_sharding(mesh, cfg)}
+        sh = {"qb": engine.lattice_sharding()}
         qb = ckpt.restore(args.ckpt_dir, like, shardings=sh)["qb"]
         print(f"[simulate] restored lattice at sweep {start_sweep}")
     else:
-        full = L.random_lattice(key, h, w, jnp.dtype(args.dtype))
-        quads = L.to_quads(full)
-        qb = jnp.stack([L.block(quads[i], bs) for i in range(4)])
-        qb = jax.device_put(qb, dising.lattice_sharding(mesh, cfg))
-
-    run_chunk = dising.make_run_sweeps_fn(mesh, cfg, n_sweeps=args.chunk)
-    mag = dising.magnetization_global(mesh, cfg)
+        qb = engine.init(key)
 
     done = start_sweep
     t_total, spins = 0.0, h * w
     while done < args.sweeps:
         n = min(args.chunk, args.sweeps - done)
-        runner = (run_chunk if n == args.chunk
-                  else dising.make_run_sweeps_fn(mesh, cfg, n_sweeps=n))
         t0 = time.perf_counter()
-        qb = runner(qb, jax.random.fold_in(key, done))
+        qb = engine.run_sweeps(qb, jax.random.fold_in(key, done), n)
         qb.block_until_ready()
         dt = time.perf_counter() - t0
         t_total += dt
         done += n
-        m = float(mag(qb))
+        m = engine.magnetization(qb)
         print(f"[simulate] sweep {done:6d}  m={m:+.4f}  "
               f"{n * spins / dt / 1e9:.4f} flips/ns")
         if args.ckpt_dir:

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed import sharding as SH
 from repro.distributed.sharding import shard_hint
 from repro.models import layers as nn
@@ -159,7 +160,7 @@ def moe_forward_ep(p: dict, cfg, x: jax.Array, mesh,
             aux = jax.lax.pmean(aux, batch_axes)
         return y.reshape(xl.shape), aux
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         local_moe, mesh=mesh, check_vma=False,
         in_specs=(x_spec, P(), w_spec,
                   (w_spec if gated else P()), w_spec),

@@ -78,13 +78,14 @@ def test_ppermute_wire_bytes(subproc):
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.analysis import hlo as H
+    from repro.compat import shard_map
     mesh = jax.make_mesh((4,), ("d",))
 
     def f(x):
         return jax.lax.ppermute(x, "d", [(i, (i + 1) % 4) for i in range(4)])
 
-    m = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
-                      check_vma=False)
+    m = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
+                  check_vma=False)
     x = jnp.zeros((4 * 1024, 128), jnp.float32)   # 512 KB/device shard
     c = jax.jit(m).lower(x).compile()
     s = H.collective_summary(c.as_text(), 4)

@@ -56,6 +56,7 @@ def test_psum_compressed_across_pod_axis(subproc):
     out = subproc("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.distributed import compression as C
     from repro.launch import mesh as mesh_lib
 
@@ -67,7 +68,7 @@ def test_psum_compressed_across_pod_axis(subproc):
         approx = C.psum_compressed({"g": x}, "pod")["g"]
         return exact, approx
 
-    mapped = jax.jit(jax.shard_map(
+    mapped = jax.jit(shard_map(
         f, mesh=mesh, in_specs=P("pod", "data"),
         out_specs=P("pod", "data"), check_vma=False))
     exact, approx = mapped(g)

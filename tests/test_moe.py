@@ -147,7 +147,9 @@ def test_moe_in_transformer_trains():
                                 cfg.vocab_size, jnp.int32)
     batch = {"tokens": tokens, "labels": tokens}
     losses = []
-    for _ in range(5):
+    # 10 steps, not 5: adafactor's lr warmup keeps the first ~4 steps
+    # within noise of the initial loss, which made a 5-step check flaky.
+    for _ in range(10):
         state, m = step(state, batch)
         losses.append(float(m["loss"]))
     assert all(np.isfinite(losses))

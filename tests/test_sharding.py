@@ -4,13 +4,14 @@ resolution; device-level placement is covered by the dry-run tests."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.distributed import sharding as SH
 
 
 def _mesh(shape=(2, 16, 16), axes=("pod", "data", "model")):
-    return AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 def test_basic_resolution():
