@@ -1,8 +1,19 @@
-"""Shared benchmark utilities: wall-clock timing with warmup, CSV emission."""
+"""Shared benchmark utilities: wall-clock timing with warmup, CSV emission,
+and a row collector so drivers can serialize sections to JSON."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, List, Optional
+
+# When a driver (benchmarks.run --json) installs a list here, emit() appends
+# {"name", "us_per_call", "derived"} dicts to it in addition to printing.
+_ROW_SINK: Optional[List[dict]] = None
+
+
+def collect_rows(sink: Optional[List[dict]]) -> None:
+    """Install (or clear, with None) the row sink emit() mirrors into."""
+    global _ROW_SINK
+    _ROW_SINK = sink
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -21,4 +32,8 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV rows."""
-    print(f"{name},{seconds * 1e6:.1f},{derived}")
+    us = seconds * 1e6
+    print(f"{name},{us:.1f},{derived}")
+    if _ROW_SINK is not None:
+        _ROW_SINK.append({"name": name, "us_per_call": round(us, 1),
+                          "derived": derived})

@@ -14,10 +14,16 @@ import numpy as np
 from benchmarks.common import emit, time_fn
 
 
-def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0):
+def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0,
+        smoke=False):
     import jax
     from repro.core import observables as obs
     from repro.core import sampler
+
+    if smoke:
+        # CI-sized: one tiny lattice, short chains — the correctness gates
+        # below scale their thresholds to the softer finite-size transition.
+        sizes, n_sweeps, burnin, points = (16, 32), 400, 150, 5
 
     tc = obs.critical_temperature()
     temps = np.linspace(0.75 * tc, 1.25 * tc, points)
@@ -34,8 +40,10 @@ def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0):
     rows = results[("bfloat16", max(sizes))]
     below = [r for r in rows if r["T"] < 0.9 * tc]
     above = [r for r in rows if r["T"] > 1.15 * tc]
-    ok_order = all(r["m_abs"] > 0.7 for r in below)
-    ok_disorder = all(r["m_abs"] < 0.45 for r in above)
+    m_hi = 0.65 if smoke else 0.7     # finite-size softening at 32^2
+    m_lo = 0.5 if smoke else 0.45
+    ok_order = all(r["m_abs"] > m_hi for r in below)
+    ok_disorder = all(r["m_abs"] < m_lo for r in above)
     # U4 separates phases
     ok_u4 = all(b["U4"] > a["U4"] for b in below for a in above)
 
@@ -45,9 +53,10 @@ def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0):
         for rb, rf in zip(results[("bfloat16", size)],
                           results[("float32", size)]):
             diffs.append(abs(rb["m_abs"] - rf["m_abs"]))
-    bf16_agree = max(diffs) < 0.2
+    bf16_agree = max(diffs) < (0.25 if smoke else 0.2)
 
-    print(f"# fig4: sizes={sizes} sweeps={n_sweeps} points={points}")
+    print(f"# fig4: sizes={sizes} sweeps={n_sweeps} points={points} "
+          f"smoke={smoke}")
     print(f"# {'T/Tc':>6} | " + " | ".join(
         f"m({s})bf16 U4({s})bf16" for s in sizes))
     for i, t in enumerate(temps):
@@ -62,8 +71,8 @@ def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0):
     return ok_order and ok_disorder and ok_u4 and bf16_agree
 
 
-def main():
-    ok = run()
+def main(smoke=False):
+    ok = run(smoke=smoke)
     print(f"# fig4 verdict: {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

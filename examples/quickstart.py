@@ -53,6 +53,10 @@ def main():
     for i in range(0, args.sweeps, max(1, args.sweeps // 10)):
         print(f"  sweep {i:5d}  magnetization {float(ms[i]):+.4f}  "
               f"energy/spin {float(es[i]):+.4f}")
+    mom = result.moments  # streamed running averages (core.measure)
+    print(f"streamed moments: <|m|>={mom['m_abs']:.4f}  "
+          f"<E>={mom['E']:+.4f}  U4={mom['U4']:.4f}  "
+          f"({mom['n_samples']} samples)")
     print(f"final magnetization {engine.magnetization(result.state):+.4f}")
 
 

@@ -19,6 +19,13 @@ pipeline        ``paper`` (f32 uniforms + float acceptance) or ``opt``
                 beyond-paper fast path in ``distributed.ising``)
 ==============  =====================================================
 
+plus the update-rule axis (``rule="metropolis" | "heat_bath"`` — one
+:mod:`repro.core.update_rules` registry entry runs on every 2-D backend)
+and the measurement plane: every measured run streams running
+``(|m|, E, m^2, m^4)`` moments (:mod:`repro.core.measure`) out of the
+compiled loop — including ``pipeline='opt'``, mesh topology, and the
+Pallas backends, which used to be measurement-free-only —
+
 plus the ensemble axis, which is the genuinely new capability: setting
 ``betas`` (instead of scalar ``beta``) runs R independent replicas at
 distinct temperatures in ONE jitted program — ``vmap`` over the replica
@@ -51,6 +58,7 @@ from repro import compat
 from repro.core import checkerboard as cb
 from repro.core import ising3d as I3
 from repro.core import lattice as L
+from repro.core import measure
 from repro.core import observables as obs
 from repro.core import sampler
 from repro.core import tempering as pt
@@ -59,6 +67,7 @@ _BACKENDS = ("xla", "pallas", "pallas_lines", "ref")
 _TOPOLOGIES = ("single", "mesh")
 _PIPELINES = ("paper", "opt")
 _ENSEMBLES = ("independent", "tempering")
+_RULES = ("metropolis", "heat_bath")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,13 +95,15 @@ class EngineConfig:
     replica_axes: tuple = ("data",)    # ensemble sharding axes on a mesh
 
     exchange_every: int = 5            # tempering swap cadence (sweeps)
-    accept: str = "lut"                # lut | exp
+    accept: str = "lut"                # lut | exp (Metropolis table form)
+    rule: str = "metropolis"           # metropolis | heat_bath (Glauber)
     dtype: str = "bfloat16"
     prob_dtype: str = "float32"
     block_size: int = 0                # 0 -> min(128, size // 2)
     interpret: Optional[bool] = None   # Pallas interpret mode; None -> auto
                                        # (False on TPU, True elsewhere)
-    measure: bool = True               # stream per-sweep (m, E)
+    measure: bool = True               # stream per-sweep (m, E) + moments
+    measure_every: int = 1             # moment-accumulation thinning cadence
     field: float = 0.0                 # external field h (2-D xla only)
     hot: Optional[bool] = None         # None -> hot above Tc, cold below
 
@@ -106,6 +117,15 @@ class EngineConfig:
 
     def n_replicas(self) -> int:
         return len(self.betas)
+
+    def probs_rule(self) -> str:
+        """update_rules name for float-uniform (paper pipeline) paths."""
+        return "heat_bath" if self.rule == "heat_bath" else self.accept
+
+    def kernel_rule(self) -> str:
+        """update_rules name compiled into the Pallas/ref kernels."""
+        return ("heat_bath" if self.rule == "heat_bath"
+                else "metropolis_lut")
 
     def validate(self) -> None:
         err = _config_error
@@ -126,6 +146,17 @@ class EngineConfig:
         if self.ensemble not in _ENSEMBLES:
             err(f"ensemble must be one of {_ENSEMBLES}, "
                 f"got {self.ensemble!r}")
+        if self.rule not in _RULES:
+            err(f"rule must be one of {_RULES}, got {self.rule!r}")
+        if self.measure_every < 1:
+            err(f"measure_every must be >= 1, got {self.measure_every}")
+        if self.rule == "heat_bath":
+            if self.dims == 3:
+                err("rule='heat_bath' is 2-D only (the 3-D sampler has no "
+                    "registry hook yet)")
+            if self.ensemble == "tempering":
+                err("tempering runs Metropolis dynamics (swap acceptance "
+                    "assumes it); rule must be 'metropolis'")
         if self.dims == 3:
             if self.backend != "xla":
                 err("3-D supports only backend='xla' (the kernel stack is "
@@ -174,10 +205,6 @@ class EngineConfig:
             if self.backend not in ("xla", "pallas_lines"):
                 err("pipeline='opt' runs on backend='xla' or "
                     f"'pallas_lines'; got {self.backend!r}")
-            if self.measure:
-                err("pipeline='opt' is the measurement-free throughput "
-                    "path; set measure=False and compute observables "
-                    "from the returned state")
         if self.backend in ("pallas", "pallas_lines", "ref"):
             if self.field:
                 err(f"backend={self.backend!r} requires field=0 (the "
@@ -201,10 +228,6 @@ class EngineConfig:
                 err("mesh topology supports backend='xla' (GSPMD/shard_map)"
                     " or 'pallas_lines' (edge-line halo); "
                     f"got {self.backend!r}")
-            if self.measure and not self.betas:
-                err("mesh scalar-beta runs are measurement-free (the "
-                    "paper's throughput loop); set measure=False and use "
-                    "IsingEngine.magnetization for logging")
             if self.field:
                 err("mesh topology requires field=0")
 
@@ -225,13 +248,23 @@ class EngineResult:
                     quads [4, R, C], replicas [Rr, 4, R, C], blocked
                     [4, MR, MC, bs, bs] on a mesh, or [D, H, W] in 3-D)
     magnetization:  per-sweep m, shape [T] or [n_replicas, T] (None when
-                    measure=False)
+                    measure=False, or on mesh/opt fori_loop runs which
+                    stream moments instead of a series)
     energy:         per-sweep E/spin, same shape (None when unmeasured)
+    moments:        streamed running averages over the measured sweeps —
+                    dict with m_abs, E, m2, m4, U4, n_samples (scalars, or
+                    arrays of shape [n_replicas] for ensembles). Present on
+                    every measured run EXCEPT tempering (which reports the
+                    per-round |m| series and swap fraction only); for
+                    mesh/opt it is the ONLY measurement output (accumulated
+                    inside the compiled loop, measure_every thinning — no
+                    per-sweep series ever reaches the host).
     extra:          scenario extras (tempering swap fraction, betas, ...)
     """
     state: jax.Array
     magnetization: Optional[jax.Array] = None
     energy: Optional[jax.Array] = None
+    moments: Optional[dict] = None
     extra: dict = dataclasses.field(default_factory=dict)
 
 
@@ -331,7 +364,7 @@ class IsingEngine:
             row_axes=row_axes, col_axes=col_axes, accept=c.accept,
             backend=("pallas_lines" if c.backend == "pallas_lines"
                      else "xla"),
-            prob_dtype=c.prob_dtype, pipeline=c.pipeline)
+            prob_dtype=c.prob_dtype, pipeline=c.pipeline, rule=c.rule)
 
     def lattice_sharding(self):
         """NamedSharding of the blocked mesh state [4, MR, MC, bs, bs]."""
@@ -342,7 +375,7 @@ class IsingEngine:
         c = self.cfg
         return sampler.ChainConfig(
             beta=(c.beta if beta is None else beta), n_sweeps=c.n_sweeps,
-            block_size=c.resolved_block_size(), accept=c.accept,
+            block_size=c.resolved_block_size(), accept=c.probs_rule(),
             dtype=c.dtype, prob_dtype=c.prob_dtype, measure=c.measure,
             field=c.field)
 
@@ -410,10 +443,17 @@ class IsingEngine:
         pdt = jnp.dtype(c.prob_dtype)
         n_rep = c.n_replicas()
 
+        rule = c.probs_rule()
+
         def one_sweep(q, k, beta, step):
             probs = sampler.sweep_probs(k, step, q.shape[1:], pdt)
-            return cb.sweep_compact(q, probs, beta, bs, c.accept,
+            return cb.sweep_compact(q, probs, beta, bs, rule,
                                     field=c.field)
+
+        def one_sweep_measured(q, k, beta, step):
+            probs = sampler.sweep_probs(k, step, q.shape[1:], pdt)
+            return measure.sweep_compact_measured(q, probs, beta, bs, rule,
+                                                  field=c.field)
 
         def run(state, key):
             keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
@@ -427,10 +467,9 @@ class IsingEngine:
                 return final, None, None
 
             def body(carry, step):
-                q = jax.vmap(one_sweep, in_axes=(0, 0, 0, None))(
+                q, (m, e) = jax.vmap(
+                    one_sweep_measured, in_axes=(0, 0, 0, None))(
                     carry, keys, betas, step)
-                m = jax.vmap(obs.magnetization)(q)
-                e = jax.vmap(obs.energy_per_spin)(q)
                 return q, (m, e)
 
             final, (ms, es) = jax.lax.scan(body, state,
@@ -440,10 +479,17 @@ class IsingEngine:
         return jax.jit(run)
 
     def _kernel_runner(self):
-        """Pallas / ref backend chain (single device, scalar β)."""
+        """Pallas / ref backend chain (single device, scalar β).
+
+        Measured runs keep the lattice BLOCKED through the whole scan and
+        stream (m, E) via ``measure.blocked_stats`` — one compact-stencil
+        nn recompute per sweep instead of the old per-sweep
+        ``_unblock_quads`` + ``from_quads`` + roll reconstruction.
+        """
         from repro.kernels import ops as kops
         c = self.cfg
         bs = c.resolved_block_size()
+        rule = c.kernel_rule()
         interpret = (jax.default_backend() != "tpu" if c.interpret is None
                      else c.interpret)
 
@@ -452,7 +498,7 @@ class IsingEngine:
                 final = kops.run_sweeps(state, key, n_sweeps=c.n_sweeps,
                                         beta=c.beta, bs=bs,
                                         backend=c.backend,
-                                        interpret=interpret)
+                                        interpret=interpret, rule=rule)
                 return final, None, None
 
             def body(carry, step):
@@ -461,10 +507,8 @@ class IsingEngine:
                     bits = kops.color_bits(key, step, color, qb.shape[1:])
                     qb = kops.update_color(qb, bits, c.beta, color,
                                            backend=c.backend,
-                                           interpret=interpret)
-                quads = kops._unblock_quads(qb)
-                return qb, (obs.magnetization(quads),
-                            obs.energy_per_spin(quads))
+                                           interpret=interpret, rule=rule)
+                return qb, measure.blocked_stats(qb)
 
             qb0 = kops._block_quads(state, bs)
             qb, (ms, es) = jax.lax.scan(body, qb0, jnp.arange(c.n_sweeps))
@@ -474,18 +518,32 @@ class IsingEngine:
 
     def _opt_runner(self):
         """Beyond-paper integer-threshold pipeline via distributed.ising
-        (trivial 1-device mesh when topology='single')."""
+        (trivial 1-device mesh when topology='single'). With measure=True
+        the streaming plane accumulates (|m|, E, m2, m4) moments inside
+        the same fori_loop — the throughput path is no longer blind."""
         from repro.distributed import ising as dising
-        runner = dising.make_run_sweeps_fn(self.mesh, self._dist_cfg(),
-                                           self.cfg.n_sweeps)
-        return lambda state, key: (runner(state, key), None, None)
+        c = self.cfg
+        if c.measure:
+            runner = dising.make_run_chain_fn(self.mesh, self._dist_cfg(),
+                                              c.n_sweeps, c.measure_every)
 
-    def _mesh_runner(self, n_sweeps: int):
+            def run(state, key):
+                final, mom = runner(state, key)
+                return final, None, None, mom
+            return run
+        runner = dising.make_run_sweeps_fn(self.mesh, self._dist_cfg(),
+                                           c.n_sweeps)
+        return lambda state, key: (runner(state, key), None, None, None)
+
+    def _mesh_runner(self, n_sweeps: int, measured: bool = False):
         from repro.distributed import ising as dising
-        key_ = ("mesh", n_sweeps)
+        key_ = ("mesh", n_sweeps, measured)
         if key_ not in self._runner_cache:
-            self._runner_cache[key_] = dising.make_run_sweeps_fn(
-                self.mesh, self._dist_cfg(), n_sweeps)
+            make = (dising.make_run_chain_fn if measured
+                    else dising.make_run_sweeps_fn)
+            args = ((self.cfg.measure_every,) if measured else ())
+            self._runner_cache[key_] = make(self.mesh, self._dist_cfg(),
+                                            n_sweeps, *args)
         return self._runner_cache[key_]
 
     def _runner_3d(self):
@@ -528,10 +586,15 @@ class IsingEngine:
             if c.measure:
                 final, ms, es = sampler.run_chain(state, key,
                                                   self._chain_cfg())
-                return EngineResult(final, ms, es)
+                return EngineResult(final, ms, es,
+                                    self._series_moments(ms, es))
             return EngineResult(sampler.run_sweeps(state, key,
                                                    self._chain_cfg()))
         if scen == "mesh":
+            if c.measure:
+                final, mom = self._mesh_runner(c.n_sweeps, measured=True)(
+                    state, key)
+                return EngineResult(final, moments=measure.finalize(mom))
             return EngineResult(self._mesh_runner(c.n_sweeps)(state, key))
         runner_key = scen
         if runner_key not in self._runner_cache:
@@ -541,9 +604,21 @@ class IsingEngine:
                 "opt": self._opt_runner,
                 "3d": self._runner_3d,
             }[scen]()
-        final, ms, es = self._runner_cache[runner_key](state, key)
+        out = self._runner_cache[runner_key](state, key)
+        final, ms, es = out[:3]
+        mom = (measure.finalize(out[3]) if len(out) > 3 and out[3] is not None
+               else self._series_moments(ms, es))
         extra = {"betas": c.betas} if scen == "ensemble" else {}
-        return EngineResult(final, ms, es, extra)
+        return EngineResult(final, ms, es, mom, extra)
+
+    def _series_moments(self, ms, es) -> Optional[dict]:
+        """Moments from an already-streamed per-sweep series (scan paths) —
+        same reporting contract as the fori_loop paths that only
+        accumulate. None when the run was measurement-free."""
+        if ms is None or es is None:
+            return None
+        return measure.finalize(measure.moments_from_series(
+            ms, es, measure_every=self.cfg.measure_every))
 
     def _run_tempering(self, state: jax.Array,
                        key: jax.Array) -> EngineResult:
@@ -559,7 +634,7 @@ class IsingEngine:
         final, ms, frac = pt.run_tempering(key, c.size, tcfg,
                                            init_replicas=state)
         return EngineResult(final, ms.T, None,
-                            {"swap_fraction": frac, "betas": c.betas})
+                            extra={"swap_fraction": frac, "betas": c.betas})
 
     def run_sweeps(self, state: jax.Array, key: jax.Array,
                    n_sweeps: int) -> jax.Array:
@@ -578,6 +653,21 @@ class IsingEngine:
     def magnetization(self, state: jax.Array) -> float:
         """Global mean spin of any engine state layout (host scalar)."""
         return float(jnp.mean(state.astype(jnp.float32)))
+
+    def stats(self, state: jax.Array) -> tuple:
+        """Exact global (m, E/spin) of a mesh/opt blocked state without
+        gathering it — one jitted shard_map psum over the sharded lattice
+        (the streaming plane's standalone entry point; supersedes the old
+        magnetization-only logging helper)."""
+        if self._scenario() not in ("mesh", "opt"):
+            _config_error("stats(state) reads the sharded blocked layout; "
+                          "use run() results elsewhere")
+        if "global_stats" not in self._runner_cache:
+            from repro.distributed import ising as dising
+            self._runner_cache["global_stats"] = dising.global_stats(
+                self.mesh, self._dist_cfg())
+        m, e = self._runner_cache["global_stats"](state)
+        return float(m), float(e)
 
     def phase_curve(self, key: jax.Array, burnin: int = 0,
                     full_stats: bool = False) -> list:

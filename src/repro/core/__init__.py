@@ -16,3 +16,10 @@ from repro.core.observables import (  # noqa: F401
 from repro.core.sampler import (  # noqa: F401
     ChainConfig, run_chain, run_sweeps, init_state, measure_curve,
 )
+from repro.core.update_rules import (  # noqa: F401
+    UpdateRule, get_rule, register_rule, rule_names,
+)
+from repro.core.measure import (  # noqa: F401
+    Moments, init_moments, accumulate, finalize, blocked_stats,
+    bond_energy_from_nn, sweep_compact_measured,
+)

@@ -10,8 +10,9 @@ Three implementations, all bitwise-comparable when fed the same uniforms:
                                  matmuls against the bidiagonal kernel K-hat.
                                  ~3x less work (no wasted RNG / nn / mask).
 
-Acceptance uses either ``exp`` (paper) or an exact 5-entry LUT (beyond-paper:
-sigma*nn only takes values in {-4,-2,0,2,4}).
+Site updates dispatch on :mod:`repro.core.update_rules` — ``accept``
+names a registry rule: ``exp`` (paper), ``lut`` (exact 5-entry table;
+sigma*nn only takes values in {-4,-2,0,2,4}), or ``heat_bath`` (Glauber).
 """
 from __future__ import annotations
 
@@ -21,73 +22,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lattice as L
+from repro.core import update_rules as rules
 
 # ---------------------------------------------------------------------------
-# Acceptance probability
+# Acceptance probability — the math now lives in repro.core.update_rules
+# (one registry serving this module, the Pallas kernels, and the
+# distributed integer pipeline). These names remain the public API.
 # ---------------------------------------------------------------------------
 
-
-def acceptance_table(beta, dtype=jnp.float32) -> jax.Array:
-    """acc[k] = exp(-2*beta*x) for x = 2k-4, k=0..4 (x = sigma*nn)."""
-    x = jnp.arange(-4.0, 5.0, 2.0, dtype=jnp.float32)
-    return jnp.exp(-2.0 * jnp.float32(beta) * x).astype(dtype)
-
-
-def acceptance_thresholds_u24(beta) -> list[int]:
-    """Integer acceptance thresholds: flip iff (bits >> 8) < t[(x+4)/2].
-
-    Bitwise-identical to comparing the 24-bit uniform u = (bits>>8)/2^24
-    against the f32 LUT entry a = f32(exp(-2*beta*x)):  u < a  <=>
-    u_int < a * 2^24, and the count of admissible u_int values is
-    ceil(a * 2^24) (a is a dyadic rational, so this is exact).
-    """
-    import fractions
-    import math as _math
-
-    import numpy as _np
-
-    out = []
-    for x in (-4.0, -2.0, 0.0, 2.0, 4.0):
-        a32 = float(_np.float32(_math.exp(-2.0 * float(beta) * x)))
-        t = int(_math.ceil(fractions.Fraction(a32) * (1 << 24)))
-        out.append(min(t, 1 << 24))  # a >= 1: every u accepted
-    return out
-
-
-def acceptance(nn: jax.Array, sigma: jax.Array, beta,
-               method: str = "lut", field: float = 0.0) -> jax.Array:
-    """P(accept flip of sigma) given neighbour sum nn. Same dtype as sigma.
-
-    field = external magnetic field h (paper assumes h=0): flipping sigma
-    costs dE = 2*sigma*(J*nn + h), so acceptance = exp(-2*beta*(x + s*h))
-    with x = sigma*nn. The h term forces the exp path (x + s*h is no
-    longer 5-valued).
-    """
-    x = nn * sigma  # in {-4,-2,0,2,4}, exact in bf16
-    if field:
-        arg = (x.astype(jnp.float32)
-               + sigma.astype(jnp.float32) * jnp.float32(field))
-        acc = jnp.exp(-2.0 * jnp.asarray(beta, jnp.float32) * arg)
-        return acc.astype(sigma.dtype)
-    if method == "exp":
-        # paper: acceptance = exp(-2 * beta * nn * sigma)
-        acc = jnp.exp(-2.0 * jnp.asarray(beta, jnp.float32)
-                      * x.astype(jnp.float32))
-        return acc.astype(sigma.dtype)
-    if method == "lut":
-        table = acceptance_table(beta, sigma.dtype)
-        idx = ((x.astype(jnp.float32) + 4.0) * 0.5).astype(jnp.int32)
-        return jnp.take(table, idx)
-    raise ValueError(f"unknown acceptance method {method!r}")
+acceptance_table = rules.acceptance_table
+acceptance_thresholds_u24 = rules.metropolis_thresholds_u24
+acceptance = rules.metropolis_acceptance
 
 
 def _flip(sigma: jax.Array, nn: jax.Array, probs: jax.Array, beta,
           accept: str, field: float = 0.0) -> jax.Array:
-    """Metropolis flip: sigma -> -sigma where probs < acceptance."""
-    acc = acceptance(nn, sigma, beta, accept, field)
-    flips = (probs.astype(acc.dtype) < acc)
-    # sigma - 2*flips*sigma, but branch-free select keeps spins exact.
-    return jnp.where(flips, -sigma, sigma)
+    """One colour's site update: dispatch on the update-rule registry.
+
+    ``accept`` is a rule name or alias: 'lut' / 'exp' (Metropolis, bitwise
+    identical to the pre-registry implementations) or 'heat_bath'.
+    """
+    return rules.get_rule(accept).flip_probs(sigma, nn, probs, beta, field)
 
 
 # ---------------------------------------------------------------------------
@@ -243,13 +198,16 @@ def update_color_compact(quads: jax.Array, probs0: jax.Array,
                          probs1: jax.Array, beta, color: int,
                          block_size: int = L.MXU_BLOCK,
                          accept: str = "lut", edges=default_edges,
-                         field: float = 0.0) -> jax.Array:
+                         field: float = 0.0, return_stats: bool = False):
     """Paper Algorithm 2: update one colour of the compact representation.
 
     quads:  [4, R, C] parity sub-lattices.
     probs0: [R, C] uniforms for the first quad of the colour (A if black, B else).
     probs1: [R, C] uniforms for the second quad (D if black, C else).
     edges:  halo provider (default: single-device torus rolls).
+    return_stats: also return ``(new0, new1, nn0, nn1)`` (blocked) — the
+        inputs the streaming measurement plane (:mod:`repro.core.measure`)
+        turns into the bond energy without recomputing neighbour sums.
     """
     kh = L.kernel_compact(block_size, quads.dtype)
     a, b, c, d = (L.block(quads[i], block_size) for i in range(4))
@@ -264,8 +222,14 @@ def update_color_compact(quads: jax.Array, probs0: jax.Array,
     new0 = _flip(s0, nn0.astype(s0.dtype), p0, beta, accept, field)
     new1 = _flip(s1, nn1.astype(s1.dtype), p1, beta, accept, field)
     if color == 0:
-        return jnp.stack([L.unblock(new0), quads[1], quads[2], L.unblock(new1)])
-    return jnp.stack([quads[0], L.unblock(new0), L.unblock(new1), quads[3]])
+        out = jnp.stack([L.unblock(new0), quads[1], quads[2],
+                         L.unblock(new1)])
+    else:
+        out = jnp.stack([quads[0], L.unblock(new0), L.unblock(new1),
+                         quads[3]])
+    if return_stats:
+        return out, (new0, new1, nn0, nn1)
+    return out
 
 
 def sweep_compact(quads: jax.Array, probs: jax.Array, beta,

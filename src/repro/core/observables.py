@@ -38,50 +38,69 @@ def critical_temperature() -> float:
     return 2.0 / math.log(1.0 + math.sqrt(2.0))
 
 
-def susceptibility(m_samples: jax.Array, beta: float, n_spins: int) -> float:
-    """chi = beta * N * (<m^2> - <|m|>^2) (per spin, |m| convention)."""
-    m = jnp.abs(m_samples.astype(jnp.float64))
-    return float(beta * n_spins * (jnp.mean(m ** 2) - jnp.mean(m) ** 2))
+def susceptibility(m_samples, beta: float, n_spins: int) -> float:
+    """chi = beta * N * (<m^2> - <|m|>^2) (per spin, |m| convention).
+
+    Host-side reduction in NUMPY float64: ``jnp...astype(float64)`` without
+    the global x64 flag silently runs in f32, and the variance of a
+    near-constant chain cancels catastrophically there.
+    """
+    import numpy as np
+    m = np.abs(np.asarray(m_samples, np.float64))
+    return float(beta * n_spins * (np.mean(m ** 2) - np.mean(m) ** 2))
 
 
-def specific_heat(e_samples: jax.Array, beta: float, n_spins: int) -> float:
-    """C = beta^2 * N * (<E^2> - <E>^2) per spin (E is energy per spin)."""
-    e = e_samples.astype(jnp.float64)
-    return float(beta ** 2 * n_spins * (jnp.mean(e ** 2) - jnp.mean(e) ** 2))
+def specific_heat(e_samples, beta: float, n_spins: int) -> float:
+    """C = beta^2 * N * (<E^2> - <E>^2) per spin (E is energy per spin).
+    Host-side numpy float64 (see :func:`susceptibility`)."""
+    import numpy as np
+    e = np.asarray(e_samples, np.float64)
+    return float(beta ** 2 * n_spins * (np.mean(e ** 2) - np.mean(e) ** 2))
 
 
-def autocorrelation_time(samples: jax.Array, max_lag: int = 0) -> float:
+def autocorrelation_time(samples, max_lag: int = 0) -> float:
     """Integrated autocorrelation time tau of a scalar chain: 1 + 2*sum
-    rho(t), summed until rho first drops below 0 (standard windowing)."""
-    x = jnp.asarray(samples, jnp.float64)
-    x = x - jnp.mean(x)
+    rho(t), summed until rho first drops below 0 (standard windowing).
+
+    Vectorized: one FFT-based autocovariance for all lags at once (numpy
+    float64 on the host) instead of the old per-lag Python loop, which
+    paid one device sync per lag.
+    """
+    import numpy as np
+    x = np.asarray(samples, np.float64)
+    x = x - x.mean()
     n = x.shape[0]
-    var = jnp.mean(x * x)
+    var = x.dot(x) / n
     max_lag = max_lag or min(n // 4, 200)
-    tau = 1.0
-    for t in range(1, max_lag):
-        rho = float(jnp.mean(x[:-t] * x[t:]) / jnp.maximum(var, 1e-300))
-        if rho <= 0:
-            break
-        tau += 2.0 * rho
-    return tau
+    if max_lag < 2 or var <= 0:
+        return 1.0
+    # autocovariance via zero-padded FFT: sum_k x[k] x[k+t] for every t
+    f = np.fft.rfft(x, 2 * n)
+    acov = np.fft.irfft(f * np.conj(f))[:max_lag]
+    # normalize each lag by its overlap count, matching mean(x[:-t]*x[t:])
+    rho = (acov / (n - np.arange(max_lag))) / max(var, 1e-300)
+    nonpos = np.nonzero(rho[1:] <= 0)[0]
+    stop = int(nonpos[0]) + 1 if nonpos.size else max_lag
+    return float(1.0 + 2.0 * rho[1:stop].sum())
 
 
-def chain_statistics(m_samples: jax.Array, e_samples: jax.Array,
+def chain_statistics(m_samples, e_samples,
                      burnin: int = 0, beta: float = 0.0,
                      n_spins: int = 0) -> dict:
     """Reduce per-sweep scalar samples to the paper's Fig.-4 quantities
-    (plus susceptibility / specific heat / tau when beta, n_spins given)."""
-    m = jnp.abs(m_samples[burnin:].astype(jnp.float64))
-    e = e_samples[burnin:].astype(jnp.float64)
-    m2 = jnp.mean(m ** 2)
-    m4 = jnp.mean(m ** 4)
+    (plus susceptibility / specific heat / tau when beta, n_spins given).
+    All reductions host-side in numpy float64."""
+    import numpy as np
+    m = np.abs(np.asarray(m_samples, np.float64)[burnin:])
+    e = np.asarray(e_samples, np.float64)[burnin:]
+    m2 = np.mean(m ** 2)
+    m4 = np.mean(m ** 4)
     out = {
-        "m_abs": float(jnp.mean(m)),
+        "m_abs": float(np.mean(m)),
         "m2": float(m2),
         "m4": float(m4),
         "U4": float(binder_parameter(m2, m4)),
-        "E": float(jnp.mean(e)),
+        "E": float(np.mean(e)),
         "n_samples": int(m.shape[0]),
     }
     if beta and n_spins:

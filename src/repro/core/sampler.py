@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import checkerboard as cb
 from repro.core import lattice as L
+from repro.core import measure as ms
 from repro.core import observables as obs
 
 
@@ -30,7 +31,7 @@ class ChainConfig:
     beta: float
     n_sweeps: int
     block_size: int = L.MXU_BLOCK
-    accept: str = "lut"          # "lut" | "exp"
+    accept: str = "lut"          # update rule: "lut" | "exp" | "heat_bath"
     dtype: str = "bfloat16"      # lattice/acceptance dtype
     prob_dtype: str = "float32"  # dtype of the uniform draws
     measure: bool = True
@@ -56,16 +57,20 @@ def make_sweep_fn(cfg: ChainConfig):
 
 @functools.partial(jax.jit, static_argnums=(2,))
 def _run_chain_impl(quads, key, cfg: ChainConfig):
-    one_sweep = make_sweep_fn(cfg)
+    """Measured chain: per-sweep (m, E) stream from the white half-update's
+    own nn sums (repro.core.measure) — the compiled loop never rebuilds the
+    full lattice (`from_quads`) or re-rolls neighbour sums."""
+    pdt = jnp.dtype(cfg.prob_dtype)
 
     def body(carry, step):
-        q = one_sweep(carry, key, step)
-        m = obs.magnetization(q)
-        e = obs.energy_per_spin(q)
+        probs = sweep_probs(key, step, carry.shape[1:], pdt)
+        q, (m, e) = ms.sweep_compact_measured(carry, probs, cfg.beta,
+                                              cfg.block_size, cfg.accept,
+                                              field=cfg.field)
         return q, (m, e)
 
-    final, (ms, es) = jax.lax.scan(body, quads, jnp.arange(cfg.n_sweeps))
-    return final, ms, es
+    final, (m_t, e_t) = jax.lax.scan(body, quads, jnp.arange(cfg.n_sweeps))
+    return final, m_t, e_t
 
 
 def run_chain(quads: jax.Array, key: jax.Array, cfg: ChainConfig):

@@ -25,6 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import checkerboard as cb
 from repro.core import lattice as L
+from repro.core import measure
+from repro.core import update_rules
 from repro.distributed import halo
 from repro.kernels import ops as kops
 
@@ -45,6 +47,16 @@ class DistIsingConfig:
     pipeline: str = "paper"
     bits_dtype: str = "uint32"  # "uint16" halves RNG traffic (opt only)
     rng: str = "threefry"       # "threefry" | "rbg" (lax.rng_bit_generator)
+    rule: str = "metropolis"    # update_rules name: "metropolis"|"heat_bath"
+
+    def probs_rule(self) -> str:
+        """Registry name for the float-probs (paper-pipeline) path."""
+        return ("heat_bath" if self.rule == "heat_bath" else self.accept)
+
+    def bits_rule(self) -> str:
+        """Registry name for the bits paths (opt pipeline / Pallas)."""
+        return ("heat_bath" if self.rule == "heat_bath"
+                else "metropolis_lut")
 
 
 def lattice_spec(cfg: DistIsingConfig) -> P:
@@ -82,35 +94,26 @@ def _draw_bits(k: jax.Array, shape, cfg: DistIsingConfig) -> jax.Array:
 
 
 def _flip_int(sigma, nn, bits, beta):
-    """Integer-threshold Metropolis flip (exact; see acceptance_thresholds).
+    """Integer-threshold Metropolis flip (exact; see
+    ``update_rules.metropolis_thresholds_u24``).
 
     nn*sigma is exact in bf16 (values in {-4..4}); thresholds are compared
     against the top 24 bits (uint32) or all 16 bits (uint16, thresholds
     rescaled to 2^16 with ceil — a 2^-16-granular acceptance, statistically
     indistinguishable and half the RNG traffic)."""
-    t24 = cb.acceptance_thresholds_u24(beta)
-    if bits.dtype == jnp.uint16:
-        ts = [min((t + 255) >> 8, 1 << 16) for t in t24]
-        u = bits.astype(jnp.uint32)
-        lim = 1 << 16
-    else:
-        ts = t24
-        u = bits >> 8
-        lim = 1 << 24
-    x = nn * sigma  # bf16, exact
-    thresh = jnp.where(
-        x <= -3.0, jnp.uint32(min(ts[0], lim)),
-        jnp.where(x <= -1.0, jnp.uint32(min(ts[1], lim)),
-                  jnp.where(x <= 1.0, jnp.uint32(min(ts[2], lim)),
-                            jnp.where(x <= 3.0, jnp.uint32(ts[3]),
-                                      jnp.uint32(ts[4])))))
-    return jnp.where(u < thresh, -sigma, sigma)
+    return update_rules.metropolis_int.flip_bits_int(sigma, nn, bits, beta)
 
 
-def _local_color_update(quads, key, step, color, cfg, edges):
+def _local_color_update(quads, key, step, color, cfg, edges,
+                        return_stats: bool = False):
     """One colour update; quads is a 4-TUPLE (a, b, c, d) of device-local
     [mr, mc, bs, bs] arrays. Tuple-carry (not a stacked [4, ...] tensor)
     avoids a full-lattice restack round-trip per colour (§Perf Ising it. 3).
+
+    ``return_stats`` additionally returns ``(new0, new1, nn0, nn1)`` so the
+    streaming measurement plane can form the bond energy from the sums the
+    update already computed (XLA backend only — the Pallas kernel keeps nn
+    in VMEM; callers fall back to ``measure.blocked_stats`` there).
     """
     k = jax.random.fold_in(jax.random.fold_in(key, step), color)
     a, b, c, d = quads
@@ -119,8 +122,9 @@ def _local_color_update(quads, key, step, color, cfg, edges):
         bits = jax.random.bits(k, (2,) + blk, jnp.uint32)
         out = kops.update_color(jnp.stack(quads), bits, cfg.beta, color,
                                 backend="pallas_lines", interpret=True,
-                                edges=edges)
-        return tuple(out[i] for i in range(4))
+                                edges=edges, rule=cfg.bits_rule())
+        out = tuple(out[i] for i in range(4))
+        return (out, None) if return_stats else out
     kh = L.kernel_compact(a.shape[-1], a.dtype)
     if color == 0:
         nn0, nn1 = cb.nn_black(a, b, c, d, kh, edges)
@@ -129,18 +133,20 @@ def _local_color_update(quads, key, step, color, cfg, edges):
         nn0, nn1 = cb.nn_white(a, b, c, d, kh, edges)
         s0, s1 = b, c
     if cfg.pipeline == "opt":
+        rule = update_rules.get_rule(cfg.bits_rule())
         bits = _draw_bits(k, (2,) + blk, cfg)
-        new0 = _flip_int(s0, nn0.astype(s0.dtype), bits[0], cfg.beta)
-        new1 = _flip_int(s1, nn1.astype(s1.dtype), bits[1], cfg.beta)
+        new0 = rule.flip_bits_int(s0, nn0.astype(s0.dtype), bits[0], cfg.beta)
+        new1 = rule.flip_bits_int(s1, nn1.astype(s1.dtype), bits[1], cfg.beta)
     else:  # paper-faithful float pipeline
         probs = jax.random.uniform(k, (2,) + blk, jnp.dtype(cfg.prob_dtype))
         new0 = cb._flip(s0, nn0.astype(s0.dtype), probs[0], cfg.beta,
-                        cfg.accept)
+                        cfg.probs_rule())
         new1 = cb._flip(s1, nn1.astype(s1.dtype), probs[1], cfg.beta,
-                        cfg.accept)
-    if color == 0:
-        return (new0, b, c, new1)
-    return (a, new0, new1, d)
+                        cfg.probs_rule())
+    out = (new0, b, c, new1) if color == 0 else (a, new0, new1, d)
+    if return_stats:
+        return out, (new0, new1, nn0, nn1)
+    return out
 
 
 def make_sweep_fn(mesh, cfg: DistIsingConfig):
@@ -233,8 +239,83 @@ def make_sweep_with_bits_fn(mesh, cfg: DistIsingConfig):
     return jax.jit(mapped)
 
 
-def magnetization_global(mesh, cfg: DistIsingConfig):
-    """Jitted global magnetization of the sharded blocked lattice."""
-    def f(qb):
-        return jnp.mean(qb.astype(jnp.float32))
-    return jax.jit(f)
+def _stats_axes(cfg: DistIsingConfig) -> tuple:
+    """Mesh axes the streamed scalars psum over (rows + cols, flattened)."""
+    row = (cfg.row_axes,) if isinstance(cfg.row_axes, str) else cfg.row_axes
+    col = (cfg.col_axes,) if isinstance(cfg.col_axes, str) else cfg.col_axes
+    return tuple(row) + tuple(col)
+
+
+def make_run_chain_fn(mesh, cfg: DistIsingConfig, n_sweeps: int,
+                      measure_every: int = 1):
+    """Measured mesh chain: ``run(qb_global, key) -> (qb_global, Moments)``.
+
+    The streaming measurement plane inside the shard_map loop: per-sweep
+    (m, E) come from the white half-update's own nn sums (XLA backend) or
+    one blocked-stencil recompute (Pallas backend), psum-reduced to exact
+    global scalars, and accumulated into running ``(|m|, E, m2, m4)``
+    moments with ``measure_every`` thinning — no ``from_quads``, no host
+    round-trips, and the same fori_loop structure as the throughput path.
+
+    Replaces the old magnetization-only ``magnetization_global`` helper:
+    mesh runs now stream the full Fig.-4 moment set.
+    """
+    nrows = halo.axis_size(mesh, cfg.row_axes)
+    ncols = halo.axis_size(mesh, cfg.col_axes)
+    spec = lattice_spec(cfg)
+    axes = _stats_axes(cfg)
+    n_dev = nrows * ncols
+
+    def local_run(qb, key):
+        edges = halo.halo_edges(cfg.row_axes, cfg.col_axes, nrows, ncols)
+        dkey = _device_key(key, cfg, ncols)
+        n_spins = 4 * qb[0].size * n_dev  # global spin count (static)
+
+        def body(step, carry):
+            quads, mom = carry
+            quads = _local_color_update(quads, dkey, step, 0, cfg, edges)
+            quads, stats = _local_color_update(quads, dkey, step, 1, cfg,
+                                               edges, return_stats=True)
+            if stats is not None:
+                new0, new1, nn0, nn1 = stats
+                m = measure.magnetization_mean(quads, n_spins, axes)
+                e = measure.bond_energy_from_nn(new0, new1, nn0, nn1,
+                                                n_spins, axes)
+            else:  # pallas_lines: nn stays in VMEM; one stencil recompute
+                m, e = measure.blocked_stats(quads, n_spins, edges=edges,
+                                             axis_names=axes)
+            mom = measure.accumulate(mom, m, e, step, measure_every)
+            return quads, mom
+
+        quads, mom = jax.lax.fori_loop(
+            0, n_sweeps, body,
+            (tuple(qb[i] for i in range(4)), measure.init_moments()))
+        return jnp.stack(quads), mom
+
+    mapped = shard_map(local_run, mesh=mesh, check_vma=False,
+                       in_specs=(spec, P()),
+                       out_specs=(spec,
+                                  measure.Moments(
+                                      *([P()] * measure.N_FIELDS))))
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
+def global_stats(mesh, cfg: DistIsingConfig):
+    """Jitted exact (m, E/spin) of the sharded blocked lattice — the
+    standalone companion of :func:`make_run_chain_fn` for logging between
+    compiled chunks (supersedes ``magnetization_global``)."""
+    nrows = halo.axis_size(mesh, cfg.row_axes)
+    ncols = halo.axis_size(mesh, cfg.col_axes)
+    spec = lattice_spec(cfg)
+    axes = _stats_axes(cfg)
+    n_dev = nrows * ncols
+
+    def local_stats(qb):
+        edges = halo.halo_edges(cfg.row_axes, cfg.col_axes, nrows, ncols)
+        n_spins = 4 * qb[0].size * n_dev
+        return measure.blocked_stats(qb, n_spins, edges=edges,
+                                     axis_names=axes)
+
+    mapped = shard_map(local_stats, mesh=mesh, check_vma=False,
+                       in_specs=(spec,), out_specs=(P(), P()))
+    return jax.jit(mapped)

@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import update_rules
+
 USE_INKERNEL_PRNG = False  # flip on real TPU; see module docstring
 
 VMEM_BYTES = 16 * 1024 * 1024  # v5e VMEM per core
@@ -59,35 +61,28 @@ def vmem_bytes_per_cell(bs: int, lattice_bytes: int = 2,
 
 _INV_2_24 = 1.0 / float(1 << 24)
 
-
-def _bits_to_uniform(bits):
-    """uint32 -> f32 uniform in [0, 1): keep the top 24 bits (exact in f32)."""
-    return (bits >> 8).astype(jnp.float32) * _INV_2_24
+# The flip math is owned by repro.core.update_rules (compile-time
+# ``kernel_form``); these names remain as the kernel's historical API.
+_bits_to_uniform = update_rules.bits_to_uniform
 
 
 def _lut_acceptance(x, beta):
-    """exp(-2*beta*x) for x = sigma*nn in {-4,-2,0,2,4}; compile-time table."""
+    """exp(-2*beta*x) for x = sigma*nn in {-4,-2,0,2,4}; compile-time table
+    as a select chain (cheaper than a gather on the VPU, exact)."""
     t = [math.exp(-2.0 * beta * v) for v in (-4.0, -2.0, 0.0, 2.0, 4.0)]
-    # select-chain: cheaper than a gather on the VPU, exact.
-    return jnp.where(
-        x <= -3.0, t[0],
-        jnp.where(x <= -1.0, t[1],
-                  jnp.where(x <= 1.0, t[2],
-                            jnp.where(x <= 3.0, t[3], t[4]))))
+    return update_rules._select5(x, t)
 
 
 def _metropolis(sigma, nn, bits, beta):
-    x = nn * sigma.astype(jnp.float32)
-    acc = _lut_acceptance(x, beta)
-    flips = _bits_to_uniform(bits) < acc
-    return jnp.where(flips, -sigma, sigma)
+    return update_rules.metropolis_lut.kernel_form(beta)(sigma, nn, bits)
 
 
 def _update_kernel(s0_ref, s1_ref,
                    p0_ref, p0a_ref, p0b_ref,
                    p1_ref, p1a_ref, p1b_ref,
                    kh_ref, bits0_ref, bits1_ref,
-                   out0_ref, out1_ref, *, color: int, beta: float):
+                   out0_ref, out1_ref, *, color: int, beta: float,
+                   rule: str = "metropolis_lut"):
     """Update the two active quads of one (bs x bs) block.
 
     black (color=0): s0=A, s1=D; p0*=B tiles, p1*=C tiles
@@ -126,14 +121,16 @@ def _update_kernel(s0_ref, s1_ref,
         nn1 = nn1.at[-1, :].add(p0a_ref[0, 0, 0, :].astype(f32))   # A south
         nn1 = nn1.at[:, 0].add(p1b_ref[0, 0, :, -1].astype(f32))   # D west
 
-    out0_ref[0, 0] = _metropolis(s0_ref[0, 0], nn0, bits0_ref[0, 0], beta)
-    out1_ref[0, 0] = _metropolis(s1_ref[0, 0], nn1, bits1_ref[0, 0], beta)
+    flip = update_rules.get_rule(rule).kernel_form(beta)
+    out0_ref[0, 0] = flip(s0_ref[0, 0], nn0, bits0_ref[0, 0])
+    out1_ref[0, 0] = flip(s1_ref[0, 0], nn1, bits1_ref[0, 0])
 
 
 def _update_kernel_lines(s0_ref, s1_ref, p0_ref, p1_ref, kh_ref,
                          bits0_ref, bits1_ref,
                          row0_ref, col0_ref, row1_ref, col1_ref,
-                         out0_ref, out1_ref, *, color: int, beta: float):
+                         out0_ref, out1_ref, *, color: int, beta: float,
+                         rule: str = "metropolis_lut"):
     """Edge-lines variant: halo lines are precomputed outside the kernel
     ([mr, mc, bs] arrays), so each passive quad tile is streamed from HBM
     exactly once (the tile-fetch variant reads them 3x). Beyond-paper
@@ -164,12 +161,14 @@ def _update_kernel_lines(s0_ref, s1_ref, p0_ref, p1_ref, kh_ref,
                + jnp.dot(p1, kh, preferred_element_type=f32))
         nn1 = nn1.at[-1, :].add(r1).at[:, 0].add(c1)
 
-    out0_ref[0, 0] = _metropolis(s0_ref[0, 0], nn0, bits0_ref[0, 0], beta)
-    out1_ref[0, 0] = _metropolis(s1_ref[0, 0], nn1, bits1_ref[0, 0], beta)
+    flip = update_rules.get_rule(rule).kernel_form(beta)
+    out0_ref[0, 0] = flip(s0_ref[0, 0], nn0, bits0_ref[0, 0])
+    out1_ref[0, 0] = flip(s1_ref[0, 0], nn1, bits1_ref[0, 0])
 
 
 def update_color_pallas_lines(quads_blocked, bits, kh, beta: float, color: int,
-                              interpret: bool = True, edges=None):
+                              interpret: bool = True, edges=None,
+                              rule: str = "metropolis_lut"):
     """Edge-lines kernel wrapper. ``edges(xb, side) -> [mr, mc, bs]`` supplies
     halo lines (default: single-device torus rolls). Distributed samplers pass
     the ppermute-based provider — the kernel itself is distribution-agnostic.
@@ -190,7 +189,8 @@ def update_color_pallas_lines(quads_blocked, bits, kh, beta: float, color: int,
     kspec = pl.BlockSpec((1, 1) + kh.shape, lambda r, q: (0, 0, 0, 0))
 
     out0, out1 = pl.pallas_call(
-        functools.partial(_update_kernel_lines, color=color, beta=float(beta)),
+        functools.partial(_update_kernel_lines, color=color,
+                          beta=float(beta), rule=rule),
         grid=(mr, mc),
         in_specs=[tile, tile, tile, tile, kspec, tile, tile,
                   line, line, line, line],
@@ -206,7 +206,8 @@ def update_color_pallas_lines(quads_blocked, bits, kh, beta: float, color: int,
 
 
 def update_color_pallas(quads_blocked, bits, kh, beta: float, color: int,
-                        interpret: bool = True):
+                        interpret: bool = True,
+                        rule: str = "metropolis_lut"):
     """One colour update of blocked compact quads.
 
     quads_blocked: [4, mr, mc, bs, bs]  (A, B, C, D)
@@ -242,7 +243,8 @@ def update_color_pallas(quads_blocked, bits, kh, beta: float, color: int,
                  kspec, center, center]
 
     out0, out1 = pl.pallas_call(
-        functools.partial(_update_kernel, color=color, beta=float(beta)),
+        functools.partial(_update_kernel, color=color, beta=float(beta),
+                          rule=rule),
         grid=(mr, mc),
         in_specs=specs,
         out_specs=[center, center],

@@ -38,43 +38,50 @@ def color_bits(key: jax.Array, step, color: int, shape) -> jax.Array:
 
 def update_color(quads_blocked: jax.Array, bits: jax.Array, beta: float,
                  color: int, backend: str = "pallas",
-                 interpret: bool = True, edges=None) -> jax.Array:
+                 interpret: bool = True, edges=None,
+                 rule: str = "metropolis_lut") -> jax.Array:
     """backend: 'pallas' (tile-fetch halo), 'pallas_lines' (edge-line halo,
-    distribution-capable), or 'ref' (pure-jnp oracle)."""
+    distribution-capable), or 'ref' (pure-jnp oracle). ``rule`` names a
+    ``repro.core.update_rules`` entry compiled into the kernel."""
     bs = quads_blocked.shape[-1]
     kh = L.kernel_compact(bs, quads_blocked.dtype)
     if backend == "pallas":
         return kern.update_color_pallas(quads_blocked, bits, kh, beta, color,
-                                        interpret=interpret)
+                                        interpret=interpret, rule=rule)
     if backend == "pallas_lines":
         return kern.update_color_pallas_lines(quads_blocked, bits, kh, beta,
                                               color, interpret=interpret,
-                                              edges=edges)
+                                              edges=edges, rule=rule)
     if backend == "ref":
-        return kref.update_color_ref(quads_blocked, bits, kh, beta, color)
+        return kref.update_color_ref(quads_blocked, bits, kh, beta, color,
+                                     rule=rule)
     raise ValueError(f"unknown backend {backend!r}")
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("beta", "bs", "backend", "interpret"))
+                   static_argnames=("beta", "bs", "backend", "interpret",
+                                    "rule"))
 def sweep(quads: jax.Array, key: jax.Array, step, *, beta: float,
           bs: int = L.MXU_BLOCK, backend: str = "pallas",
-          interpret: bool = True) -> jax.Array:
+          interpret: bool = True,
+          rule: str = "metropolis_lut") -> jax.Array:
     """One full sweep of [4, R, C] compact quads. Returns updated quads."""
     qb = _block_quads(quads, bs)
     blk = qb.shape[1:]
     for color in (0, 1):
         bits = color_bits(key, step, color, blk)
-        qb = update_color(qb, bits, beta, color, backend, interpret)
+        qb = update_color(qb, bits, beta, color, backend, interpret,
+                          rule=rule)
     return _unblock_quads(qb)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_sweeps", "beta", "bs", "backend",
-                                    "interpret"))
+                                    "interpret", "rule"))
 def run_sweeps(quads: jax.Array, key: jax.Array, *, n_sweeps: int, beta: float,
                bs: int = L.MXU_BLOCK, backend: str = "pallas",
-               interpret: bool = True) -> jax.Array:
+               interpret: bool = True,
+               rule: str = "metropolis_lut") -> jax.Array:
     """Measurement-free multi-sweep loop on the kernel path."""
     qb = _block_quads(quads, bs)
     blk = qb.shape[1:]
@@ -82,7 +89,8 @@ def run_sweeps(quads: jax.Array, key: jax.Array, *, n_sweeps: int, beta: float,
     def body(i, q):
         for color in (0, 1):
             bits = color_bits(key, i, color, blk)
-            q = update_color(q, bits, beta, color, backend, interpret)
+            q = update_color(q, bits, beta, color, backend, interpret,
+                             rule=rule)
         return q
 
     qb = jax.lax.fori_loop(0, n_sweeps, body, qb)

@@ -1,9 +1,10 @@
 """Pure-jnp oracle for the Pallas checkerboard kernel.
 
 Mirrors the kernel bit-for-bit: identical bits->uniform conversion, identical
-f32 LUT acceptance, identical flip rule — built on the independently-validated
-``repro.core.checkerboard`` compact math (which itself is tested against the
-brute-force full-lattice oracle).
+f32 table acceptance, identical flip rule — all supplied by the same
+``repro.core.update_rules`` registry the kernel compiles against, applied to
+the independently-validated ``repro.core.checkerboard`` compact math (which
+itself is tested against the brute-force full-lattice oracle).
 """
 from __future__ import annotations
 
@@ -14,26 +15,23 @@ import jax.numpy as jnp
 
 from repro.core import checkerboard as cb
 from repro.core import lattice as L
+from repro.core import update_rules
 
 _INV_2_24 = 1.0 / float(1 << 24)
 
-
-def bits_to_uniform(bits: jax.Array) -> jax.Array:
-    return (bits >> 8).astype(jnp.float32) * _INV_2_24
+bits_to_uniform = update_rules.bits_to_uniform
 
 
 def lut_acceptance(x: jax.Array, beta: float) -> jax.Array:
     t = [math.exp(-2.0 * beta * v) for v in (-4.0, -2.0, 0.0, 2.0, 4.0)]
-    return jnp.where(
-        x <= -3.0, t[0],
-        jnp.where(x <= -1.0, t[1],
-                  jnp.where(x <= 1.0, t[2],
-                            jnp.where(x <= 3.0, t[3], t[4]))))
+    return update_rules._select5(x, t)
 
 
 def update_color_ref(quads_blocked: jax.Array, bits: jax.Array, kh: jax.Array,
-                     beta: float, color: int) -> jax.Array:
-    """Oracle with the exact kernel semantics (f32 nn, f32 LUT, f32 compare).
+                     beta: float, color: int,
+                     rule: str = "metropolis_lut") -> jax.Array:
+    """Oracle with the exact kernel semantics (f32 nn, f32 table, f32
+    compare) for any registry rule.
 
     Same signature as ``update_color_pallas`` minus ``interpret``.
     """
@@ -46,14 +44,9 @@ def update_color_ref(quads_blocked: jax.Array, bits: jax.Array, kh: jax.Array,
         nn0, nn1 = cb.nn_white(a, b, c, d, khf)
         s0, s1 = b, c
 
-    def flip(sigma, nn, bit):
-        x = nn.astype(jnp.float32) * sigma.astype(jnp.float32)
-        acc = lut_acceptance(x, beta)
-        f = bits_to_uniform(bit) < acc
-        return jnp.where(f, -sigma, sigma)
-
-    new0 = flip(s0, nn0, bits[0])
-    new1 = flip(s1, nn1, bits[1])
+    flip = update_rules.get_rule(rule).kernel_form(float(beta))
+    new0 = flip(s0, nn0.astype(jnp.float32), bits[0])
+    new1 = flip(s1, nn1.astype(jnp.float32), bits[1])
     if color == 0:
         return jnp.stack([new0, b, c, new1])
     return jnp.stack([a, new0, new1, d])

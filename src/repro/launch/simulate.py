@@ -26,6 +26,8 @@ def main(argv=None):
     ap.add_argument("--temperature-ratio", type=float, default=1.0)
     ap.add_argument("--dtype", default="bfloat16")
     ap.add_argument("--pipeline", default="paper", choices=["paper", "opt"])
+    ap.add_argument("--rule", default="metropolis",
+                    choices=["metropolis", "heat_bath"])
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -57,8 +59,9 @@ def main(argv=None):
     engine = IsingEngine(EngineConfig(
         size=h, width=w, beta=1.0 / t, n_sweeps=args.chunk,
         topology="mesh", mesh_shape=shape, mesh_axes=axes,
-        pipeline=args.pipeline, block_size=bs, dtype=args.dtype,
-        prob_dtype="bfloat16", measure=False, hot=True), mesh=mesh)
+        pipeline=args.pipeline, rule=args.rule, block_size=bs,
+        dtype=args.dtype, prob_dtype="bfloat16", measure=False,
+        hot=True), mesh=mesh)
     print(f"[simulate] mesh={dict(mesh.shape)} lattice {h}x{w} "
           f"({h*w/1e6:.1f}M spins) T/Tc={args.temperature_ratio} "
           f"dtype={args.dtype}")
@@ -84,8 +87,8 @@ def main(argv=None):
         dt = time.perf_counter() - t0
         t_total += dt
         done += n
-        m = engine.magnetization(qb)
-        print(f"[simulate] sweep {done:6d}  m={m:+.4f}  "
+        m, e = engine.stats(qb)  # exact psum stats, no lattice gather
+        print(f"[simulate] sweep {done:6d}  m={m:+.4f}  E/spin={e:+.4f}  "
               f"{n * spins / dt / 1e9:.4f} flips/ns")
         if args.ckpt_dir:
             ckpt.save(args.ckpt_dir, {"qb": qb}, step=done, keep=2)

@@ -145,6 +145,66 @@ def test_opt_pipeline_single_device():
     assert set(np.unique(np.asarray(res.state, np.float32))) <= {-1.0, 1.0}
 
 
+def test_opt_pipeline_streams_moments():
+    """pipeline='opt' + measure=True (now legal): running (|m|, E, m2, m4)
+    moments accumulate inside the compiled loop; with one sweep they match
+    the oracle observables of the returned final state exactly (the
+    streamed sums are integer-exact in f32)."""
+    from repro.core import lattice as L
+    from repro.core import observables as obs
+
+    key = jax.random.PRNGKey(0)
+    eng = IsingEngine(EngineConfig(size=SIZE, beta=BETA, n_sweeps=1,
+                                   block_size=BLOCK, pipeline="opt",
+                                   measure=True, hot=True))
+    res = eng.run(eng.init(key), key)
+    assert res.magnetization is None            # fori_loop path: no series
+    mom = res.moments
+    assert mom["n_samples"] == 1
+    state = jnp.asarray(jax.device_get(res.state))
+    quads = jnp.stack([L.unblock(state[i]) for i in range(4)])
+    assert mom["E"] == float(obs.energy_per_spin(quads))
+    assert mom["m_abs"] == abs(float(obs.magnetization(quads)))
+
+
+def test_measure_every_thins_moments():
+    key = jax.random.PRNGKey(2)
+    kw = dict(size=SIZE, beta=BETA, n_sweeps=10, block_size=BLOCK, hot=True)
+    full = IsingEngine(EngineConfig(**kw))
+    thin = IsingEngine(EngineConfig(measure_every=2, **kw))
+    r_full = full.run(full.init(key), key)
+    r_thin = thin.run(thin.init(key), key)
+    assert r_full.moments["n_samples"] == 10
+    assert r_thin.moments["n_samples"] == 5
+    # thinned moments == manual slice of the full series
+    ms = np.asarray(r_full.magnetization, np.float64)[::2]
+    np.testing.assert_allclose(r_thin.moments["m_abs"],
+                               np.abs(ms).mean(), rtol=1e-6)
+
+
+def test_heat_bath_rule_dispatches_every_2d_backend():
+    """rule='heat_bath' runs on xla / ref / pallas / pallas_lines and the
+    opt pipeline; ref == pallas stays bitwise under the new rule."""
+    key = jax.random.PRNGKey(5)
+    out = {}
+    for backend in ("xla", "ref", "pallas", "pallas_lines"):
+        eng = IsingEngine(EngineConfig(size=SIZE, beta=BETA, n_sweeps=2,
+                                       block_size=BLOCK, backend=backend,
+                                       rule="heat_bath", hot=True))
+        res = eng.run(eng.init(key), key)
+        state = np.asarray(res.state, np.float32)
+        assert set(np.unique(state)) <= {-1.0, 1.0}, backend
+        out[backend] = state
+        assert res.moments is not None and res.moments["n_samples"] == 2
+    np.testing.assert_array_equal(out["ref"], out["pallas"])
+    np.testing.assert_array_equal(out["ref"], out["pallas_lines"])
+    opt = IsingEngine(EngineConfig(size=SIZE, beta=BETA, n_sweeps=2,
+                                   block_size=BLOCK, pipeline="opt",
+                                   rule="heat_bath", hot=True))
+    r = opt.run(opt.init(key), key)
+    assert r.moments["n_samples"] == 2
+
+
 @pytest.mark.parametrize("bad, hint", [
     (dict(size=32, beta=0.4, betas=(0.4, 0.5)), "exactly one"),
     (dict(size=32), "exactly one"),
@@ -153,11 +213,12 @@ def test_opt_pipeline_single_device():
     (dict(size=32, beta=0.4, dims=3, backend="pallas"), "3-D"),
     (dict(size=32, beta=0.4, dims=3, width=16), "cubic"),
     (dict(size=32, beta=0.4, topology="mesh"), "mesh_shape"),
-    (dict(size=32, beta=0.4, topology="mesh", mesh_shape=(2, 2),
-          measure=True), "measurement-free"),
     (dict(size=32, betas=(0.3, 0.4), pipeline="opt"), "opt"),
-    (dict(size=32, beta=0.4, pipeline="opt", measure=True),
-     "measurement-free"),
+    (dict(size=32, beta=0.4, rule="wolff"), "rule"),
+    (dict(size=32, beta=0.4, measure_every=0), "measure_every"),
+    (dict(size=8, beta=0.3, dims=3, rule="heat_bath"), "2-D"),
+    (dict(size=32, betas=(0.3, 0.4), ensemble="tempering",
+          rule="heat_bath"), "Metropolis"),
     (dict(size=32, betas=(0.3, 0.4), ensemble="tempering", field=0.1),
      "h=0"),
     (dict(size=32, beta=0.4, backend="pallas", accept="exp"), "LUT"),
@@ -201,6 +262,16 @@ def test_mesh_dispatch_and_replica_sharding(subproc):
     assert state.shape == (4, 4, 4, 8, 8)
     res = eng.run(state, key)
     assert abs(eng.magnetization(res.state)) <= 1.0
+
+    # measured mesh run (streaming moments; no series on the fori path)
+    mcfg = EngineConfig(size=64, beta=0.4406868, n_sweeps=3, block_size=8,
+                        topology="mesh", mesh_shape=(2, 2), measure=True,
+                        hot=True)
+    meng = IsingEngine(mcfg)
+    mres = meng.run(meng.init(key), key)
+    assert mres.magnetization is None
+    assert mres.moments["n_samples"] == 3
+    assert abs(mres.moments["E"]) <= 2.0 and mres.moments["m_abs"] <= 1.0
 
     betas = beta_ladder(0.8, 1.2, 4)
     mesh_cfg = EngineConfig(size=32, betas=betas, n_sweeps=3, block_size=8,

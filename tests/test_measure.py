@@ -1,0 +1,216 @@
+"""The streaming measurement plane (repro.core.measure).
+
+Contract pinned here:
+
+* the streamed per-sweep (m, E) equal the roll-oracle observables
+  (`observables.magnetization` / `energy_per_spin`) EXACTLY — the sums are
+  integer-valued and f32-exact, so reduction order cannot perturb them;
+* the measured sweep evolves the state bitwise-identically to the
+  unmeasured sweep;
+* blocked-quads stats (kernel backends) and shard_map/psum stats (mesh)
+  agree with the single-device oracle bitwise;
+* Moments accumulate with measure_every thinning, matching a manual slice
+  of the full series.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checkerboard as cb
+from repro.core import lattice as L
+from repro.core import measure
+from repro.core import observables as obs
+from repro.core import sampler
+
+
+def _random_quads(seed, size=64, dtype=jnp.bfloat16):
+    return L.to_quads(L.random_lattice(jax.random.PRNGKey(seed), size, size,
+                                       dtype))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("size,bs", [(64, 16), (128, 32)])
+@pytest.mark.parametrize("accept", ["lut", "exp", "heat_bath"])
+def test_streamed_stats_match_oracles_exactly(seed, size, bs, accept):
+    quads = _random_quads(seed, size)
+    probs = jax.random.uniform(jax.random.PRNGKey(seed + 100),
+                               (4, size // 2, size // 2))
+    want_state = cb.sweep_compact(quads, probs, 0.44, bs, accept)
+    got_state, (m, e) = measure.sweep_compact_measured(quads, probs, 0.44,
+                                                       bs, accept)
+    np.testing.assert_array_equal(np.asarray(got_state, np.float32),
+                                  np.asarray(want_state, np.float32))
+    assert float(m) == float(obs.magnetization(want_state))
+    assert float(e) == float(obs.energy_per_spin(want_state))
+
+
+def test_blocked_stats_match_oracles_exactly():
+    for seed, bs in ((0, 16), (1, 32)):
+        quads = _random_quads(seed, 64)
+        qb = jnp.stack([L.block(quads[i], bs) for i in range(4)])
+        m, e = measure.blocked_stats(qb)
+        assert float(m) == float(obs.magnetization(quads))
+        assert float(e) == float(obs.energy_per_spin(quads))
+
+
+def test_bond_energy_identity_cold_lattice():
+    """E/N = -2 on the all-up torus (every site has nn=+4, E = -2N bonds)."""
+    quads = L.to_quads(L.cold_lattice(32, 32, jnp.bfloat16))
+    qb = jnp.stack([L.block(quads[i], 8) for i in range(4)])
+    m, e = measure.blocked_stats(qb)
+    assert float(m) == 1.0
+    assert float(e) == -2.0
+
+
+def test_measured_chain_series_match_oracle_recompute():
+    """Every element of the run_chain (m, E) series equals the oracle
+    evaluated on the state trajectory replayed sweep by sweep."""
+    cfg = sampler.ChainConfig(beta=0.44, n_sweeps=6, block_size=8)
+    key = jax.random.PRNGKey(4)
+    q = sampler.init_state(key, 32, 32)
+    final, ms, es = sampler.run_chain(q, key, cfg)
+    for step in range(cfg.n_sweeps):
+        probs = sampler.sweep_probs(key, step, q.shape[1:], jnp.float32)
+        q = cb.sweep_compact(q, probs, cfg.beta, cfg.block_size, cfg.accept)
+        assert float(ms[step]) == float(obs.magnetization(q)), step
+        assert float(es[step]) == float(obs.energy_per_spin(q)), step
+    np.testing.assert_array_equal(np.asarray(final, np.float32),
+                                  np.asarray(q, np.float32))
+
+
+def test_moments_accumulate_and_thin():
+    mom = measure.init_moments()
+    ms = [0.5, -0.25, 0.75, -1.0, 0.125]
+    es = [-1.0, -1.5, -0.5, -2.0, -1.25]
+    for step, (m, e) in enumerate(zip(ms, es)):
+        mom = measure.accumulate(mom, jnp.float32(m), jnp.float32(e),
+                                 jnp.int32(step), measure_every=2)
+    out = measure.finalize(mom)
+    kept_m = np.asarray(ms, np.float64)[::2]
+    kept_e = np.asarray(es, np.float64)[::2]
+    assert out["n_samples"] == 3
+    np.testing.assert_allclose(out["m_abs"], np.abs(kept_m).mean(),
+                               rtol=1e-6)
+    np.testing.assert_allclose(out["E"], kept_e.mean(), rtol=1e-6)
+    np.testing.assert_allclose(out["m2"], (kept_m ** 2).mean(), rtol=1e-6)
+    np.testing.assert_allclose(out["m4"], (kept_m ** 4).mean(), rtol=1e-6)
+
+
+@pytest.mark.parametrize("burnin,every", [(0, 3), (1, 2), (4, 3)])
+def test_moments_from_series_matches_loop_accumulation(burnin, every):
+    """The fori_loop accumulator and the series fold must select the SAME
+    samples (thinning grid anchored at burnin) for every (burnin, every)."""
+    rng = np.random.default_rng(0)
+    ms = rng.uniform(-1, 1, 11).astype(np.float32)
+    es = rng.uniform(-2, 0, 11).astype(np.float32)
+    mom_loop = measure.init_moments()
+    for step in range(11):
+        mom_loop = measure.accumulate(mom_loop, jnp.float32(ms[step]),
+                                      jnp.float32(es[step]),
+                                      jnp.int32(step), measure_every=every,
+                                      burnin=burnin)
+    a = measure.finalize(mom_loop)
+    b = measure.finalize(measure.moments_from_series(
+        ms, es, burnin=burnin, measure_every=every))
+    assert a["n_samples"] == b["n_samples"]
+    for k in ("m_abs", "E", "m2", "m4", "U4"):
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6), k
+
+
+def test_mesh_streamed_stats_bitwise_match_single_device(subproc):
+    """psum-reduced global (m, E) of a sharded lattice == the host oracle
+    on the gathered lattice, bitwise (integer-exact f32 sums); and the
+    in-loop measured runner evolves the state identically to the
+    measurement-free runner under the same RNG."""
+    out = subproc("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import lattice as L, measure, observables as obs
+    from repro.distributed import ising as dising
+    from repro.launch import mesh as mesh_lib
+
+    mesh = mesh_lib.make_mesh((2, 2), ("data", "model"))
+    cfg = dising.DistIsingConfig(beta=0.44, block_size=16,
+                                 row_axes=("data",), col_axes=("model",))
+    mr = mc = 4; bs = 16
+    key = jax.random.PRNGKey(1)
+    full = L.random_lattice(key, 2*mr*bs, 2*mc*bs, jnp.bfloat16)
+    quads = L.to_quads(full)
+    qb = jnp.stack([L.block(quads[i], bs) for i in range(4)])
+    qb_sh = jax.device_put(qb, dising.lattice_sharding(mesh, cfg))
+
+    # standalone stats of the sharded state == host oracle, bitwise
+    m, e = dising.global_stats(mesh, cfg)(qb_sh)
+    assert float(m) == float(obs.magnetization(quads))
+    assert float(e) == float(obs.energy_per_spin(quads))
+
+    # measured runner: same final state as the measurement-free runner,
+    # and after n_sweeps=1 the accumulated moment equals the oracle of
+    # the final state
+    run_m = dising.make_run_chain_fn(mesh, cfg, n_sweeps=1)
+    out_m, mom = run_m(qb_sh, key)
+    qb_sh2 = jax.device_put(qb, dising.lattice_sharding(mesh, cfg))
+    out_0 = dising.make_run_sweeps_fn(mesh, cfg, n_sweeps=1)(qb_sh2, key)
+    got = jax.device_get(out_m)
+    assert (got == jax.device_get(out_0)).all()
+    q_host = jnp.stack([L.unblock(jnp.asarray(got[i])) for i in range(4)])
+    assert float(mom.n) == 1.0
+    assert float(mom.e) == float(obs.energy_per_spin(q_host))
+    assert float(mom.m_abs) == abs(float(obs.magnetization(q_host)))
+    print("MEASURE_MESH_OK")
+    """, devices=4)
+    assert "MEASURE_MESH_OK" in out
+
+
+def test_kernel_backend_streams_without_unblocking(subproc=None):
+    """Engine pallas/ref measured runs: the last streamed E equals the
+    oracle on the returned final state (exact), for both rules."""
+    from repro.api import EngineConfig, IsingEngine
+
+    key = jax.random.PRNGKey(9)
+    for backend in ("ref", "pallas"):
+        for rule in ("metropolis", "heat_bath"):
+            eng = IsingEngine(EngineConfig(size=32, beta=0.44, n_sweeps=3,
+                                           block_size=8, backend=backend,
+                                           rule=rule, hot=True))
+            res = eng.run(eng.init(key), key)
+            assert float(res.energy[-1]) == float(
+                obs.energy_per_spin(res.state)), (backend, rule)
+            assert float(res.magnetization[-1]) == float(
+                obs.magnetization(res.state)), (backend, rule)
+            assert res.moments["n_samples"] == 3
+
+
+def test_no_from_quads_in_measured_sweep_loops():
+    """Structural guard for the acceptance criterion: measuring adds ZERO
+    scatter ops over the measurement-free sweep (the halo edge-line
+    ``.at[].add`` scatters are shared by both), whereas the old path's
+    ``from_quads`` reconstruction added four full-lattice scatters per
+    sweep."""
+    cfg = sampler.ChainConfig(beta=0.44, n_sweeps=3, block_size=8)
+    q = sampler.init_state(jax.random.PRNGKey(0), 32, 32)
+    key = jax.random.PRNGKey(1)
+
+    def count_scatters(fn):
+        return str(jax.make_jaxpr(fn)(q, key)).count("scatter")
+
+    def unmeasured(q, key):
+        probs = sampler.sweep_probs(key, 0, q.shape[1:], jnp.float32)
+        return cb.sweep_compact(q, probs, cfg.beta, cfg.block_size,
+                                cfg.accept)
+
+    def measured(q, key):
+        probs = sampler.sweep_probs(key, 0, q.shape[1:], jnp.float32)
+        return measure.sweep_compact_measured(q, probs, cfg.beta,
+                                              cfg.block_size, cfg.accept)
+
+    def old_path(q, key):
+        probs = sampler.sweep_probs(key, 0, q.shape[1:], jnp.float32)
+        out = cb.sweep_compact(q, probs, cfg.beta, cfg.block_size,
+                               cfg.accept)
+        return out, (obs.magnetization(out), obs.energy_per_spin(out))
+
+    base = count_scatters(unmeasured)
+    assert count_scatters(measured) == base, \
+        "measurement added scatters (full-lattice reconstruction leaked)"
+    assert count_scatters(old_path) > base  # what the refactor removed

@@ -1,0 +1,205 @@
+"""The pluggable update-rule registry (repro.core.update_rules).
+
+Contract pinned here:
+
+* the registry's Metropolis forms are BITWISE identical to the historical
+  flip implementations they replaced (core.checkerboard._flip, the kernel
+  _metropolis, distributed._flip_int) — the old formulas are replicated
+  verbatim in this file as the reference;
+* the integer-threshold forms decide identically to the float forms fed
+  the same bits, for Metropolis AND heat-bath;
+* heat-bath draws the new spin independent of the current one, with the
+  exact conditional probability, and equilibrates to the same Boltzmann
+  statistics as Metropolis on both sides of T_c.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checkerboard as cb
+from repro.core import lattice as L
+from repro.core import update_rules as ur
+
+BETAS = (0.1, 0.4406868, 1.0, 2.5)
+
+
+def _lattice_and_draws(seed=0, size=64):
+    key = jax.random.PRNGKey(seed)
+    sigma = L.random_lattice(key, size, size, jnp.bfloat16)
+    nn = cb.nn_full(sigma).astype(jnp.bfloat16)
+    probs = jax.random.uniform(jax.random.fold_in(key, 1), (size, size))
+    bits = jax.random.bits(jax.random.fold_in(key, 2), (size, size),
+                           jnp.uint32)
+    return sigma, nn, probs, bits
+
+
+# ---------------------------------------------------------------------------
+# Metropolis: bitwise parity with the pre-registry implementations
+# ---------------------------------------------------------------------------
+
+
+def _old_flip_probs(sigma, nn, probs, beta, method):
+    """The pre-registry core.checkerboard._flip, verbatim."""
+    x = nn * sigma
+    if method == "exp":
+        acc = jnp.exp(-2.0 * jnp.asarray(beta, jnp.float32)
+                      * x.astype(jnp.float32)).astype(sigma.dtype)
+    else:
+        t = jnp.exp(-2.0 * jnp.float32(beta)
+                    * jnp.arange(-4.0, 5.0, 2.0,
+                                 dtype=jnp.float32)).astype(sigma.dtype)
+        idx = ((x.astype(jnp.float32) + 4.0) * 0.5).astype(jnp.int32)
+        acc = jnp.take(t, idx)
+    return jnp.where(probs.astype(acc.dtype) < acc, -sigma, sigma)
+
+
+def _old_flip_bits(sigma, nn, bits, beta):
+    """The pre-registry kernel _metropolis / ref flip, verbatim."""
+    x = nn.astype(jnp.float32) * sigma.astype(jnp.float32)
+    t = [math.exp(-2.0 * beta * v) for v in (-4.0, -2.0, 0.0, 2.0, 4.0)]
+    acc = jnp.where(
+        x <= -3.0, t[0],
+        jnp.where(x <= -1.0, t[1],
+                  jnp.where(x <= 1.0, t[2],
+                            jnp.where(x <= 3.0, t[3], t[4]))))
+    u = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    return jnp.where(u < acc, -sigma, sigma)
+
+
+@pytest.mark.parametrize("beta", BETAS)
+@pytest.mark.parametrize("method", ["lut", "exp"])
+def test_metropolis_probs_form_bitwise_matches_old_flip(beta, method):
+    sigma, nn, probs, _ = _lattice_and_draws()
+    want = _old_flip_probs(sigma, nn, probs, beta, method)
+    got = cb._flip(sigma, nn, probs, beta, method)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("beta", BETAS)
+def test_metropolis_bits_form_bitwise_matches_old_kernel(beta):
+    sigma, nn, _, bits = _lattice_and_draws()
+    want = _old_flip_bits(sigma, nn, bits, beta)
+    got = ur.metropolis_lut.flip_bits(sigma, nn, bits, beta)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("beta", BETAS)
+def test_metropolis_int_form_matches_float_bits_form(beta):
+    sigma, nn, _, bits = _lattice_and_draws()
+    f = ur.metropolis_lut.flip_bits(sigma, nn, bits, beta)
+    i = ur.metropolis_int.flip_bits_int(sigma, nn, bits, beta)
+    np.testing.assert_array_equal(np.asarray(i, np.float32),
+                                  np.asarray(f, np.float32))
+
+
+def test_registry_lookup_and_aliases():
+    assert ur.get_rule("lut") is ur.metropolis_lut
+    assert ur.get_rule("exp") is ur.metropolis_exp
+    assert ur.get_rule("metropolis") is ur.metropolis_lut
+    assert ur.get_rule("glauber") is ur.heat_bath
+    assert set(ur.rule_names()) >= {"metropolis_lut", "metropolis_exp",
+                                    "metropolis_int", "heat_bath"}
+    with pytest.raises(ValueError, match="unknown update rule"):
+        ur.get_rule("wolff")
+
+
+# ---------------------------------------------------------------------------
+# Heat-bath (Glauber)
+# ---------------------------------------------------------------------------
+
+
+def test_heat_bath_new_spin_independent_of_old():
+    sigma, nn, probs, bits = _lattice_and_draws()
+    for beta in BETAS:
+        a = ur.heat_bath.flip_probs(sigma, nn, probs, beta)
+        b = ur.heat_bath.flip_probs(-sigma, nn, probs, beta)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert set(np.unique(np.asarray(a, np.float32))) <= {-1.0, 1.0}
+        c = ur.heat_bath.flip_bits(sigma, nn, bits, beta)
+        d = ur.heat_bath.flip_bits(-sigma, nn, bits, beta)
+        np.testing.assert_array_equal(np.asarray(c, np.float32),
+                                      np.asarray(d, np.float32))
+
+
+@pytest.mark.parametrize("beta", BETAS)
+def test_heat_bath_int_thresholds_match_float_exactly(beta):
+    """For every uniform near a threshold, the integer compare must agree
+    with the f32 compare (the dyadic-rational ceiling argument, applied to
+    the sigmoid table)."""
+    ts = ur.heat_bath_thresholds_u24(beta)
+    table = ur.heat_bath_table_f32(beta)
+    for k, nn_val in enumerate((-4.0, -2.0, 0.0, 2.0, 4.0)):
+        p32 = np.float32(table[k])
+        t = ts[k]
+        for u_int in {max(0, t - 2), max(0, t - 1), min(t, (1 << 24) - 1),
+                      min(t + 1, (1 << 24) - 1)}:
+            u = np.float32(u_int) * np.float32(1.0 / (1 << 24))
+            assert (u < p32) == (u_int < t), (beta, nn_val, u_int, t)
+
+
+def test_heat_bath_int_form_matches_float_bits_form():
+    sigma, nn, _, bits = _lattice_and_draws(seed=3)
+    for beta in BETAS:
+        f = ur.heat_bath.flip_bits(sigma, nn, bits, beta)
+        i = ur.heat_bath.flip_bits_int(sigma, nn, bits, beta)
+        np.testing.assert_array_equal(np.asarray(i, np.float32),
+                                      np.asarray(f, np.float32))
+
+
+def test_heat_bath_exact_conditional_probability():
+    """Exhaustive 24-bit check at one (beta, nn): acceptance fraction equals
+    ceil(sigmoid(2*beta*nn) * 2^24) / 2^24."""
+    beta, nn_val = 0.4406868, 2.0
+    n = 1 << 16  # uniform stratified sample of the 24-bit space: the top
+    # 16 of the 24 significant bits sweep 0..2^16-1 (bits >> 8 recovers u)
+    bits = (jnp.arange(n, dtype=jnp.uint32) << 16)
+    sigma = jnp.ones((n,), jnp.bfloat16)
+    nn = jnp.full((n,), nn_val, jnp.bfloat16)
+    out = ur.heat_bath.flip_bits(sigma, nn, bits, beta)
+    frac = float(jnp.mean((out == 1).astype(jnp.float32)))
+    want = 1.0 / (1.0 + math.exp(-2.0 * beta * nn_val))
+    assert abs(frac - want) < 2e-3, (frac, want)
+
+
+def test_heat_bath_sweep_valid_on_compact_path():
+    """cb.sweep_compact(accept='heat_bath') keeps the passive colour fixed
+    and produces only ±1 spins."""
+    key = jax.random.PRNGKey(7)
+    quads = L.to_quads(L.random_lattice(key, 64, 64, jnp.bfloat16))
+    p0 = jnp.zeros((32, 32))
+    out = cb.update_color_compact(quads, p0, p0, beta=0.44, color=0,
+                                  block_size=32, accept="heat_bath")
+    # probs=0 < p_up always -> black quads all +1, white untouched
+    assert bool(jnp.all(out[L.Q00] == 1)) and bool(jnp.all(out[L.Q11] == 1))
+    assert bool(jnp.all(out[L.Q01] == quads[L.Q01]))
+    assert bool(jnp.all(out[L.Q10] == quads[L.Q10]))
+
+
+@pytest.mark.parametrize("beta,tol_m,tol_e", [
+    (0.25, 0.08, 0.06),    # far above Tc: disordered, fast mixing
+    (0.6, 0.05, 0.05),     # below Tc: ordered phase
+])
+def test_heat_bath_equilibrium_matches_metropolis(beta, tol_m, tol_e):
+    """Same stationary distribution: long-run <|m|> and <E> agree between
+    the two dynamics within MC noise, away from and below T_c."""
+    from repro.api import EngineConfig, IsingEngine
+
+    key = jax.random.PRNGKey(11)
+    stats = {}
+    for rule in ("metropolis", "heat_bath"):
+        eng = IsingEngine(EngineConfig(size=32, beta=beta, n_sweeps=600,
+                                       block_size=8, rule=rule))
+        res = eng.run(eng.init(key), jax.random.fold_in(key, hash(rule) % 97))
+        m = np.abs(np.asarray(res.magnetization, np.float64))[200:]
+        e = np.asarray(res.energy, np.float64)[200:]
+        stats[rule] = (m.mean(), e.mean())
+    dm = abs(stats["metropolis"][0] - stats["heat_bath"][0])
+    de = abs(stats["metropolis"][1] - stats["heat_bath"][1])
+    assert dm < tol_m, stats
+    assert de < tol_e, stats
