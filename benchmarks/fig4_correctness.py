@@ -55,6 +55,24 @@ def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0,
             diffs.append(abs(rb["m_abs"] - rf["m_abs"]))
     bf16_agree = max(diffs) < (0.25 if smoke else 0.2)
 
+    # claim 4: Binder-cumulant crossing. U4 is dimensionless, so curves
+    # for two lattice sizes bracketing T_c pinch together below T_c
+    # (both -> 2/3), separate at T_c with the LARGER size on top (it is
+    # still effectively ordered where the smaller one has begun to
+    # disorder), and converge/invert above (both -> 0, larger faster).
+    # Asserted on the already-streamed f32 m2/m4 moments — a
+    # dimensionless observable gate, not just m and E.
+    s_small, s_large = min(sizes), max(sizes)
+    d_u4 = [results[("float32", s_large)][i]["U4"]
+            - results[("float32", s_small)][i]["U4"]
+            for i in range(len(temps))]
+    i_tc = int(np.argmin(np.abs(temps - tc)))
+    d_tc = d_u4[i_tc]
+    d_below_min = min(d for d, t in zip(d_u4, temps) if t <= tc)
+    ok_crossing = (d_tc > 0.02            # large size on top at T_c
+                   and d_below_min > -0.05  # no inversion below T_c
+                   and d_u4[-1] < d_tc)   # separation shrinks above T_c
+
     print(f"# fig4: sizes={sizes} sweeps={n_sweeps} points={points} "
           f"smoke={smoke}")
     print(f"# {'T/Tc':>6} | " + " | ".join(
@@ -66,9 +84,11 @@ def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0,
         print(f"# {t / tc:6.3f} | {row}")
     verdict = (f"ordered_below={ok_order} disordered_above={ok_disorder} "
                f"U4_separates={ok_u4} bf16_matches_f32={bf16_agree} "
+               f"U4_crossing={ok_crossing} dU4_at_tc={d_tc:.3f} "
                f"max_bf16_f32_diff={max(diffs):.3f}")
     emit("fig4_correctness", 0.0, verdict)
-    return ok_order and ok_disorder and ok_u4 and bf16_agree
+    return (ok_order and ok_disorder and ok_u4 and bf16_agree
+            and ok_crossing)
 
 
 def main(smoke=False):

@@ -21,13 +21,16 @@ from pathlib import Path
 
 from benchmarks import common
 
-SECTIONS = ("fig4", "table1", "table2", "kernel", "roofline")
+SECTIONS = ("fig4", "cluster", "table1", "table2", "kernel", "roofline")
 
 
 def _run_section(name: str, smoke: bool) -> int:
     if name == "fig4":
         from benchmarks import fig4_correctness
         return fig4_correctness.main(smoke=smoke)
+    if name == "cluster":
+        from benchmarks import cluster_sweep
+        return cluster_sweep.main(smoke=smoke)
     if name == "table1":
         from benchmarks import table1_single_core
         table1_single_core.run(**({"sizes_blocks": (2, 4), "block_size": 32,

@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--points", type=int, default=7)
     ap.add_argument("--tmin", type=float, default=0.7, help="T/Tc lower end")
     ap.add_argument("--tmax", type=float, default=1.3, help="T/Tc upper end")
+    ap.add_argument("--algo", default="metropolis",
+                    choices=["metropolis", "swendsen_wang", "wolff"],
+                    help="cluster algorithms decorrelate in O(1) sweeps "
+                         "at T_c, so far fewer sweeps are needed there")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -34,6 +38,7 @@ def main():
     betas = beta_ladder(args.tmin, args.tmax, args.points)
 
     print(f"size={args.size}  sweeps={args.sweeps}  burnin={args.burnin}  "
+          f"algo={args.algo}  "
           f"({args.points} temperatures in one compiled ensemble)")
     print(f"{'T/Tc':>7} | {'|m| bf16':>9} {'U4 bf16':>8} | "
           f"{'|m| f32':>9} {'U4 f32':>8}")
@@ -41,7 +46,8 @@ def main():
     rows = {}
     for dtype in ("bfloat16", "float32"):
         engine = IsingEngine(EngineConfig(
-            size=args.size, betas=betas, n_sweeps=args.sweeps, dtype=dtype))
+            size=args.size, betas=betas, n_sweeps=args.sweeps, dtype=dtype,
+            algorithm=args.algo))
         rows[dtype] = engine.phase_curve(key, burnin=args.burnin)
     for rb, rf in zip(rows["bfloat16"], rows["float32"]):
         print(f"{rb['T'] / tc:7.3f} | {rb['m_abs']:9.4f} {rb['U4']:8.4f} | "

@@ -20,7 +20,12 @@ pipeline        ``paper`` (f32 uniforms + float acceptance) or ``opt``
 ==============  =====================================================
 
 plus the update-rule axis (``rule="metropolis" | "heat_bath"`` — one
-:mod:`repro.core.update_rules` registry entry runs on every 2-D backend)
+:mod:`repro.core.update_rules` registry entry runs on every 2-D backend),
+the algorithm axis (``algorithm="metropolis"`` for single-site
+checkerboard dynamics, or ``"swendsen_wang"`` / ``"wolff"`` for the
+cluster-update plane in :mod:`repro.cluster` — Fortuin-Kasteleyn bonds +
+label-propagation components + hashed per-cluster flips, the fast-science
+path at T_c where single-site dynamics critically slow down),
 and the measurement plane: every measured run streams running
 ``(|m|, E, m^2, m^4)`` moments (:mod:`repro.core.measure`) out of the
 compiled loop — including ``pipeline='opt'``, mesh topology, and the
@@ -68,6 +73,7 @@ _TOPOLOGIES = ("single", "mesh")
 _PIPELINES = ("paper", "opt")
 _ENSEMBLES = ("independent", "tempering")
 _RULES = ("metropolis", "heat_bath")
+_ALGORITHMS = ("metropolis", "swendsen_wang", "wolff")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +103,7 @@ class EngineConfig:
     exchange_every: int = 5            # tempering swap cadence (sweeps)
     accept: str = "lut"                # lut | exp (Metropolis table form)
     rule: str = "metropolis"           # metropolis | heat_bath (Glauber)
+    algorithm: str = "metropolis"      # metropolis | swendsen_wang | wolff
     dtype: str = "bfloat16"
     prob_dtype: str = "float32"
     block_size: int = 0                # 0 -> min(128, size // 2)
@@ -148,8 +155,36 @@ class EngineConfig:
                 f"got {self.ensemble!r}")
         if self.rule not in _RULES:
             err(f"rule must be one of {_RULES}, got {self.rule!r}")
+        if self.algorithm not in _ALGORITHMS:
+            err(f"algorithm must be one of {_ALGORITHMS}, "
+                f"got {self.algorithm!r}")
         if self.measure_every < 1:
             err(f"measure_every must be >= 1, got {self.measure_every}")
+        if self.algorithm != "metropolis":
+            if self.dims == 3:
+                err("cluster algorithms are 2-D only (3-D label "
+                    "propagation is not implemented)")
+            if self.backend != "xla":
+                err("cluster algorithms run on backend='xla' (label "
+                    "propagation is a fused-array-op plane, not a Pallas "
+                    f"kernel); got {self.backend!r}")
+            if self.pipeline != "paper":
+                err("cluster algorithms have no separate opt pipeline "
+                    "(bond thresholds are already integer-exact); "
+                    "pipeline must be 'paper'")
+            if self.ensemble != "independent":
+                err("tempering swap acceptance assumes Metropolis "
+                    "dynamics; algorithm must be 'metropolis'")
+            if self.rule != "metropolis":
+                err("rule= selects single-site dynamics; cluster "
+                    "algorithms replace them entirely — leave "
+                    "rule='metropolis'")
+            if self.field:
+                err("cluster algorithms sample the h=0 Hamiltonian "
+                    "(FK bond probabilities assume it); field must be 0")
+            if self.betas and self.topology == "mesh":
+                err("cluster ensembles are single-device (vmapped); "
+                    "use topology='single' for multi-beta cluster runs")
         if self.rule == "heat_bath":
             if self.dims == 3:
                 err("rule='heat_bath' is 2-D only (the 3-D sampler has no "
@@ -338,6 +373,8 @@ class IsingEngine:
         c = self.cfg
         if c.dims == 3:
             return "3d"
+        if c.algorithm != "metropolis":
+            return ("cluster_mesh" if c.topology == "mesh" else "cluster")
         if c.ensemble == "tempering":
             return "tempering"
         if c.topology == "mesh" and not c.betas:
@@ -407,7 +444,8 @@ class IsingEngine:
             if self._auto_hot(c.beta):
                 return I3.random_lattice3d(key, n, n, n, dt)
             return I3.cold_lattice3d(n, n, n, dt)
-        if scen in ("ensemble", "tempering"):
+        if scen in ("ensemble", "tempering") or (scen == "cluster"
+                                                 and c.betas):
             states = [
                 sampler.init_state(jax.random.fold_in(key, i), c.size,
                                    c.resolved_width(), dt,
@@ -419,7 +457,7 @@ class IsingEngine:
                 state = jax.device_put(state, NamedSharding(
                     self.mesh, P(c.replica_axes, None, None, None)))
             return state
-        if scen in ("mesh", "opt"):
+        if scen in ("mesh", "opt", "cluster_mesh"):
             w = c.resolved_width()
             full = (L.random_lattice(key, c.size, w, dt)
                     if self._auto_hot(c.beta) else L.cold_lattice(c.size, w, dt))
@@ -434,6 +472,43 @@ class IsingEngine:
     # Compiled runners (cached per engine)
     # ------------------------------------------------------------------
 
+    def _replica_harness(self, one_sweep, one_sweep_measured, rep_args,
+                         pre=None, post=None):
+        """Shared R-replica scaffolding for every multi-β runner: replica
+        keys from ``fold_in(key, i)``, fori_loop (unmeasured) or scan with
+        fused per-sweep (m, E) streaming (measured), [R, T] series out.
+        ``rep_args`` is the per-replica sweep argument (β for Metropolis,
+        bond threshold for cluster sweeps); ``pre``/``post`` optionally
+        convert the state layout around the compiled loop."""
+        c = self.cfg
+        n_rep = c.n_replicas()
+        post = post or (lambda s: s)
+
+        def run(state, key):
+            if pre is not None:
+                state = pre(state)
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(n_rep))
+
+            if not c.measure:
+                def body(step, s):
+                    return jax.vmap(one_sweep, in_axes=(0, 0, 0, None))(
+                        s, keys, rep_args, step)
+                final = jax.lax.fori_loop(0, c.n_sweeps, body, state)
+                return post(final), None, None
+
+            def body(carry, step):
+                q, (m, e) = jax.vmap(
+                    one_sweep_measured, in_axes=(0, 0, 0, None))(
+                    carry, keys, rep_args, step)
+                return q, (m, e)
+
+            final, (ms, es) = jax.lax.scan(body, state,
+                                           jnp.arange(c.n_sweeps))
+            return post(final), ms.T, es.T  # [R, T]
+
+        return jax.jit(run)
+
     def _ensemble_runner(self):
         """Jitted R-replica multi-β chain: vmap over replicas, scan over
         sweeps, observables fused into the compiled loop."""
@@ -441,8 +516,6 @@ class IsingEngine:
         betas = jnp.asarray(c.betas, jnp.float32)
         bs = c.resolved_block_size()
         pdt = jnp.dtype(c.prob_dtype)
-        n_rep = c.n_replicas()
-
         rule = c.probs_rule()
 
         def one_sweep(q, k, beta, step):
@@ -455,28 +528,7 @@ class IsingEngine:
             return measure.sweep_compact_measured(q, probs, beta, bs, rule,
                                                   field=c.field)
 
-        def run(state, key):
-            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
-                jnp.arange(n_rep))
-
-            if not c.measure:
-                def body(step, s):
-                    return jax.vmap(one_sweep, in_axes=(0, 0, 0, None))(
-                        s, keys, betas, step)
-                final = jax.lax.fori_loop(0, c.n_sweeps, body, state)
-                return final, None, None
-
-            def body(carry, step):
-                q, (m, e) = jax.vmap(
-                    one_sweep_measured, in_axes=(0, 0, 0, None))(
-                    carry, keys, betas, step)
-                return q, (m, e)
-
-            final, (ms, es) = jax.lax.scan(body, state,
-                                           jnp.arange(c.n_sweeps))
-            return final, ms.T, es.T  # [R, T]
-
-        return jax.jit(run)
+        return self._replica_harness(one_sweep, one_sweep_measured, betas)
 
     def _kernel_runner(self):
         """Pallas / ref backend chain (single device, scalar β).
@@ -534,6 +586,70 @@ class IsingEngine:
         runner = dising.make_run_sweeps_fn(self.mesh, self._dist_cfg(),
                                            c.n_sweeps)
         return lambda state, key: (runner(state, key), None, None, None)
+
+    def _cluster_runner(self):
+        """Swendsen-Wang / Wolff chain on the full [L, L] view.
+
+        Scalar beta: scan of :func:`repro.cluster.sweep.cluster_sweep`
+        with a trace-time bond threshold. Multi-beta: vmap over replicas
+        with per-replica traced thresholds (bitwise-equal to the static
+        ones — see ``cluster.bonds``), same fold_in(key, i) replica-key
+        contract as the Metropolis ensemble runner.
+        """
+        from repro.cluster import bonds as cbonds
+        from repro.cluster import sweep as csweep
+        c = self.cfg
+        algo = c.algorithm
+
+        if not c.betas:
+            t24 = cbonds.bond_threshold_u24(c.beta)
+
+            def run(state, key):
+                full = L.from_quads(state)
+                if not c.measure:
+                    def body(step, f):
+                        return csweep.cluster_sweep(
+                            f, jax.random.fold_in(key, step), t24, algo)
+                    final = jax.lax.fori_loop(0, c.n_sweeps, body, full)
+                    return L.to_quads(final), None, None
+
+                def body(f, step):
+                    return csweep.cluster_sweep_measured(
+                        f, jax.random.fold_in(key, step), t24, algo)
+
+                final, (ms, es) = jax.lax.scan(body, full,
+                                               jnp.arange(c.n_sweeps))
+                return L.to_quads(final), ms, es
+
+            return jax.jit(run)
+
+        thresholds = cbonds.bond_threshold_traced(
+            jnp.asarray(c.betas, jnp.float32))
+
+        def one_sweep(f, k, t, step):
+            return csweep.cluster_sweep(f, jax.random.fold_in(k, step),
+                                        t, algo)
+
+        def one_sweep_measured(f, k, t, step):
+            return csweep.cluster_sweep_measured(
+                f, jax.random.fold_in(k, step), t, algo)
+
+        return self._replica_harness(one_sweep, one_sweep_measured,
+                                     thresholds,
+                                     pre=jax.vmap(L.from_quads),
+                                     post=jax.vmap(L.to_quads))
+
+    def _cluster_mesh_runner(self, n_sweeps: int, measured: bool = False):
+        from repro.cluster import mesh as cmesh
+        key_ = ("cluster_mesh", n_sweeps, measured)
+        if key_ not in self._runner_cache:
+            make = (cmesh.make_cluster_run_fn if measured
+                    else cmesh.make_cluster_sweeps_fn)
+            args = ((self.cfg.measure_every,) if measured else ())
+            self._runner_cache[key_] = make(
+                self.mesh, self._dist_cfg(), self.cfg.algorithm,
+                n_sweeps, *args)
+        return self._runner_cache[key_]
 
     def _mesh_runner(self, n_sweeps: int, measured: bool = False):
         from repro.distributed import ising as dising
@@ -596,11 +712,19 @@ class IsingEngine:
                     state, key)
                 return EngineResult(final, moments=measure.finalize(mom))
             return EngineResult(self._mesh_runner(c.n_sweeps)(state, key))
+        if scen == "cluster_mesh":
+            if c.measure:
+                final, mom = self._cluster_mesh_runner(
+                    c.n_sweeps, measured=True)(state, key)
+                return EngineResult(final, moments=measure.finalize(mom))
+            return EngineResult(
+                self._cluster_mesh_runner(c.n_sweeps)(state, key))
         runner_key = scen
         if runner_key not in self._runner_cache:
             self._runner_cache[runner_key] = {
                 "ensemble": self._ensemble_runner,
                 "kernel": self._kernel_runner,
+                "cluster": self._cluster_runner,
                 "opt": self._opt_runner,
                 "3d": self._runner_3d,
             }[scen]()
@@ -608,7 +732,8 @@ class IsingEngine:
         final, ms, es = out[:3]
         mom = (measure.finalize(out[3]) if len(out) > 3 and out[3] is not None
                else self._series_moments(ms, es))
-        extra = {"betas": c.betas} if scen == "ensemble" else {}
+        extra = ({"betas": c.betas}
+                 if c.betas and scen in ("ensemble", "cluster") else {})
         return EngineResult(final, ms, es, mom, extra)
 
     def _series_moments(self, ms, es) -> Optional[dict]:
@@ -638,9 +763,12 @@ class IsingEngine:
 
     def run_sweeps(self, state: jax.Array, key: jax.Array,
                    n_sweeps: int) -> jax.Array:
-        """Measurement-free chunk of the mesh scenario (checkpoint cadence
+        """Measurement-free chunk of the mesh scenarios (checkpoint cadence
         in ``repro.launch.simulate``); returns only the new state."""
-        if self._scenario() != "mesh":
+        scen = self._scenario()
+        if scen == "cluster_mesh":
+            return self._cluster_mesh_runner(n_sweeps)(state, key)
+        if scen != "mesh":
             _config_error("run_sweeps(n_sweeps=...) is the chunked mesh "
                           "runner; use run() elsewhere")
         return self._mesh_runner(n_sweeps)(state, key)
@@ -659,7 +787,7 @@ class IsingEngine:
         gathering it — one jitted shard_map psum over the sharded lattice
         (the streaming plane's standalone entry point; supersedes the old
         magnetization-only logging helper)."""
-        if self._scenario() not in ("mesh", "opt"):
+        if self._scenario() not in ("mesh", "opt", "cluster_mesh"):
             _config_error("stats(state) reads the sharded blocked layout; "
                           "use run() results elsewhere")
         if "global_stats" not in self._runner_cache:

@@ -1,0 +1,44 @@
+"""Cluster-update plane: Swendsen-Wang / Wolff dynamics in fused array ops.
+
+The checkerboard Metropolis plane is throughput-optimal per sweep but
+critically slow *per independent sample* at T_c (tau ~ L^z, z ~ 2.17).
+This subsystem trades a small constant factor per sweep for tau ~ O(1):
+
+* :mod:`repro.cluster.bonds`  — Fortuin-Kasteleyn bond activation with
+  p = 1 - exp(-2*beta), f32-exact integer thresholds, and a fully
+  counter-based per-bond RNG (hash of the global site index) so any
+  spatial decomposition draws identical bonds.
+* :mod:`repro.cluster.label`  — connected-component labeling by iterated
+  neighbour-min propagation (rolls + ``minimum``) with pointer-jumping
+  doubling, a ``while_loop`` on a changed flag.
+* :mod:`repro.cluster.sweep`  — single-device Swendsen-Wang / Wolff sweeps
+  on the full [L, L] view, with gather-free per-cluster coin flips
+  (hash of the cluster label).
+* :mod:`repro.cluster.mesh`   — the sharded path: local labeling +
+  ``ppermute`` boundary-label merge until a global ``psum``-reduced
+  changed flag clears. Bitwise-identical states to the single-device path.
+
+Engine entry point: ``EngineConfig(algorithm="swendsen_wang" | "wolff")``.
+"""
+from repro.cluster.bonds import (bond_prob_f32, bond_threshold_u24,
+                                 bond_threshold_traced, counter_bits,
+                                 fk_bonds)
+from repro.cluster.label import label_components
+from repro.cluster.sweep import (cluster_sweep, cluster_sweep_measured,
+                                 full_stats, labels_for)
+
+ALGORITHMS = ("swendsen_wang", "wolff")
+
+__all__ = [
+    "ALGORITHMS",
+    "bond_prob_f32",
+    "bond_threshold_u24",
+    "bond_threshold_traced",
+    "counter_bits",
+    "fk_bonds",
+    "label_components",
+    "cluster_sweep",
+    "cluster_sweep_measured",
+    "full_stats",
+    "labels_for",
+]

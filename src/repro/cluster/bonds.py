@@ -1,0 +1,130 @@
+"""Fortuin-Kasteleyn bond activation for cluster updates.
+
+The FK representation of the Ising model activates the bond between two
+*parallel* neighbouring spins with probability
+
+    p = 1 - exp(-2 * beta * J)          (J = 1)
+
+and never activates a bond between antiparallel spins. Flipping every
+resulting connected cluster with an independent fair coin (Swendsen-Wang)
+is a valid Boltzmann-preserving update.
+
+Two implementation choices mirror the repo's Metropolis machinery:
+
+* **Exact probabilities.** ``p`` is an f32 dyadic rational, so the float
+  compare ``u24 / 2^24 < p`` equals the integer compare
+  ``u24 < ceil(p * 2^24)`` (same `update_rules` threshold argument;
+  pinned in ``tests/test_cluster.py``). :func:`bond_threshold_u24` builds
+  the threshold at trace time from a Python float beta;
+  :func:`bond_threshold_traced` computes it from a traced beta (vmapped
+  multi-beta ensembles) — multiplying by 2^24 and taking ``ceil`` are both
+  exact in f32, so the two agree bit-for-bit.
+
+* **Counter-based per-bond RNG.** Every bond is indexed by the *global*
+  linear index of its north/west endpoint and a direction bit; the uniform
+  is a threefry hash of that counter (:func:`counter_bits`, a vectorized
+  ``fold_in``). A device holding any sub-rectangle of the lattice draws
+  bit-identical bonds to the single-device path — no bond RNG needs to
+  cross the interconnect, exactly like the spin-update RNG scheme.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import update_rules
+
+_U24 = 1 << 24
+
+
+def counter_bits(key: jax.Array, counters: jax.Array) -> jax.Array:
+    """uint32 hash bits per counter: vectorized ``fold_in(key, c)``.
+
+    ``counters`` is any integer array; the result has the same shape.
+    Equal counters give equal bits (the property the per-cluster coin
+    flip relies on: every site of a cluster hashes its shared label).
+    """
+    flat = counters.reshape(-1)
+
+    def one(c):
+        return jax.random.key_data(jax.random.fold_in(key, c))[-1]
+
+    return jax.vmap(one)(flat).reshape(counters.shape)
+
+
+def bond_prob_f32(beta) -> float:
+    """p = 1 - exp(-2*beta) computed in f32 — with the SAME ops as
+    :func:`bond_threshold_traced` (f32 ``exp``, f32 subtract), so the
+    static and traced thresholds agree bit-for-bit on a given backend."""
+    return float(1.0 - jnp.exp(-2.0 * jnp.float32(beta)))
+
+
+def bond_threshold_u24(beta) -> int:
+    """ceil(p * 2^24) for p = f32(1 - exp(-2*beta)) — the integer
+    threshold whose u24 compare is bitwise the float compare."""
+    return update_rules._thresholds_u24([bond_prob_f32(beta)])[0]
+
+
+def bond_threshold_traced(beta: jax.Array) -> jax.Array:
+    """Traced-beta twin of :func:`bond_threshold_u24` (uint32 scalar).
+
+    Exactness: p is f32; ``p * 2^24`` is a power-of-two scaling (exact in
+    f32 for p < 1), and ``ceil`` of an exactly-representable value is
+    exact — so this equals the Fraction-based host computation for every
+    f32 beta (pinned in tests).
+    """
+    p = 1.0 - jnp.exp(-2.0 * jnp.asarray(beta, jnp.float32))
+    t = jnp.ceil(p * jnp.float32(_U24)).astype(jnp.uint32)
+    return jnp.minimum(t, jnp.uint32(_U24))
+
+
+def global_index(h: int, w: int, row_offset=0, col_offset=0,
+                 global_width: int = 0) -> jax.Array:
+    """int32 [h, w] global linear site indices of a local patch.
+
+    Single device: offsets 0 and ``global_width == w``. On a mesh each
+    device passes its patch origin so bond counters (and hence bond bits)
+    are decomposition-independent.
+    """
+    gw = global_width or w
+    rows = row_offset + jnp.arange(h, dtype=jnp.int32)
+    cols = col_offset + jnp.arange(w, dtype=jnp.int32)
+    return rows[:, None] * jnp.int32(gw) + cols[None, :]
+
+
+def bond_bits(key: jax.Array, gi: jax.Array, direction: int) -> jax.Array:
+    """uint32 bond uniforms: direction 0 = east bond of site gi, 1 = south."""
+    return counter_bits(key, gi * 2 + direction)
+
+
+def active(bits: jax.Array, threshold) -> jax.Array:
+    """u24 < threshold — bitwise the f32 compare against p (see module doc)."""
+    t = (jnp.uint32(threshold) if isinstance(threshold, int)
+         else threshold.astype(jnp.uint32))
+    return (bits >> 8) < t
+
+
+def fk_bonds(full: jax.Array, key: jax.Array, threshold,
+             east: jax.Array = None, south: jax.Array = None,
+             gi: jax.Array = None):
+    """(bond_right, bond_down) bool masks for a spin patch ``full``.
+
+    bond_right[i, j] joins (i, j)-(i, j+1); bond_down[i, j] joins
+    (i, j)-(i+1, j) (torus wrap at the last row/column).
+
+    ``east`` / ``south`` default to local torus rolls; the mesh path
+    passes halo-corrected neighbour-spin arrays instead. ``gi`` defaults
+    to the single-device global index grid.
+    """
+    h, w = full.shape
+    if east is None:
+        east = jnp.roll(full, -1, 1)
+    if south is None:
+        south = jnp.roll(full, -1, 0)
+    if gi is None:
+        gi = global_index(h, w)
+    br = (full == east) & active(bond_bits(key, gi, 0), threshold)
+    bd = (full == south) & active(bond_bits(key, gi, 1), threshold)
+    return br, bd

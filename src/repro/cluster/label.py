@@ -1,0 +1,83 @@
+"""Connected-component labeling by iterated min-label propagation.
+
+TPU-friendly union-find replacement: every site starts labeled with its own
+linear index; each round takes the minimum label over its active-bond
+neighbours (4 rolls + ``minimum`` — the same primitive family as the
+neighbour sums) and then *pointer-jumps* (``lab = lab[lab]``: adopt
+the label of the site your label points at). The neighbour-min step hooks
+adjacent label trees together; the jumps halve tree depth, so the smallest
+label of a cluster floods it in O(log L) rounds in practice instead of the
+O(diameter) a pure flood would need. A ``lax.while_loop`` on a changed
+flag makes termination exact rather than heuristic.
+
+Labels are **canonical**: the fixed point assigns every site the minimum
+linear index over its cluster, so two runs (or two decompositions — see
+:mod:`repro.cluster.mesh`) agree exactly, no relabeling pass needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def init_labels(h: int, w: int) -> jax.Array:
+    return jnp.arange(h * w, dtype=jnp.int32).reshape(h, w)
+
+
+def neighbor_min(lab: jax.Array, bond_right: jax.Array,
+                 bond_down: jax.Array) -> jax.Array:
+    """min(label, labels of bond-connected neighbours) — rolls + minimum."""
+    inf = jnp.int32(_INT_MAX)
+    east = jnp.where(bond_right, jnp.roll(lab, -1, 1), inf)
+    west = jnp.where(jnp.roll(bond_right, 1, 1), jnp.roll(lab, 1, 1), inf)
+    south = jnp.where(bond_down, jnp.roll(lab, -1, 0), inf)
+    north = jnp.where(jnp.roll(bond_down, 1, 0), jnp.roll(lab, 1, 0), inf)
+    return jnp.minimum(lab, jnp.minimum(jnp.minimum(east, west),
+                                        jnp.minimum(south, north)))
+
+
+def pointer_jump(lab: jax.Array, jumps: int = 2) -> jax.Array:
+    """lab <- label-of-label, ``jumps`` times (the doubling step).
+
+    Valid because a label is always the index of a site in the same
+    cluster with a smaller-or-equal label, so jumping is monotone
+    non-increasing and stays inside the cluster.
+    """
+    h, w = lab.shape
+    flat = lab.reshape(-1)
+    for _ in range(jumps):
+        flat = flat[flat]
+    return flat.reshape(h, w)
+
+
+def label_components(bond_right: jax.Array, bond_down: jax.Array,
+                     with_iters: bool = False, rounds_per_iter: int = 2):
+    """Canonical min-index labels of the bond graph, [h, w] int32.
+
+    Exact: iterates (neighbour-min + pointer jump) until nothing changes
+    (``while_loop`` on a changed flag). ``rounds_per_iter`` inner rounds
+    run between changed-flag checks — the check costs a full compare +
+    host-visible predicate, so batching two rounds per check is ~3x
+    faster at 128^2 without changing the fixed point.
+    """
+    h, w = bond_right.shape
+    init = init_labels(h, w)
+
+    def cond(carry):
+        return carry[1]
+
+    def body(carry):
+        lab, _, it = carry
+        new = lab
+        for _ in range(rounds_per_iter):
+            new = pointer_jump(neighbor_min(new, bond_right, bond_down),
+                               jumps=1)
+        return new, jnp.any(new != lab), it + 1
+
+    lab, _, iters = jax.lax.while_loop(
+        cond, body, (init, jnp.bool_(True), jnp.int32(0)))
+    if with_iters:
+        return lab, iters
+    return lab

@@ -1,0 +1,84 @@
+"""Single-device Swendsen-Wang / Wolff sweeps on the full [L, L] view.
+
+One cluster sweep = FK bond activation (:mod:`repro.cluster.bonds`) ->
+connected-component labeling (:mod:`repro.cluster.label`) -> per-cluster
+spin assignment. The per-cluster coin flip is **gather-free**: every site
+hashes its (shared) cluster label with the sweep key
+(``counter_bits(key, label)``), so all sites of a cluster draw the same
+coin without any segment-sum scatter or per-cluster gather.
+
+* Swendsen-Wang: every cluster flips with probability 1/2 (top hash bit).
+* Wolff: one uniformly-random seed site is drawn; only the cluster
+  containing it flips (probability 1). Restricted to the seed's cluster,
+  the FK bond measure is exactly the Wolff growth law, so this is the
+  standard single-cluster algorithm — one "sweep" flips one cluster.
+
+RNG layout per sweep key k (itself ``fold_in(chain_key, step)``):
+``fold_in(k, 0)`` seeds the bond hash, ``fold_in(k, 1)`` the cluster-coin
+hash, ``fold_in(k, 2)`` the Wolff seed site — all pure counters, so any
+spatial decomposition (see :mod:`repro.cluster.mesh`) reproduces the
+sweep bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import bonds as B
+from repro.cluster import label as LBL
+
+_K_BONDS, _K_COINS, _K_SEED = 0, 1, 2
+
+
+def labels_for(full: jax.Array, key: jax.Array, threshold) -> jax.Array:
+    """Cluster labels one sweep would use: bond + label stages only.
+
+    ``key`` is the per-sweep key; ``threshold`` a u24 bond threshold
+    (``bonds.bond_threshold_u24(beta)``). The mesh path's labels are
+    pinned bitwise against this in ``tests/test_cluster.py``.
+    """
+    kb = jax.random.fold_in(key, _K_BONDS)
+    br, bd = B.fk_bonds(full, kb, threshold)
+    return LBL.label_components(br, bd)
+
+
+def _cluster_signs(full, lab, key, algorithm: str):
+    """Bool flip mask per site from the per-cluster coin (or Wolff seed)."""
+    if algorithm == "swendsen_wang":
+        kf = jax.random.fold_in(key, _K_COINS)
+        return (B.counter_bits(kf, lab) >> 31) == 1
+    if algorithm == "wolff":
+        ks = jax.random.fold_in(key, _K_SEED)
+        seed = jax.random.randint(ks, (), 0, full.size)
+        return lab == lab.reshape(-1)[seed]
+    raise ValueError(f"unknown cluster algorithm {algorithm!r}; "
+                     "use 'swendsen_wang' or 'wolff'")
+
+
+def cluster_sweep(full: jax.Array, key: jax.Array, threshold,
+                  algorithm: str = "swendsen_wang") -> jax.Array:
+    """One cluster update of the full [L, L] lattice."""
+    lab = labels_for(full, key, threshold)
+    flip = _cluster_signs(full, lab, key, algorithm)
+    return jnp.where(flip, -full, full)
+
+
+def full_stats(full: jax.Array) -> tuple:
+    """(m, E/spin) of a single-device full-view lattice — the cluster
+    plane's analogue of ``measure.blocked_stats``: two rolls,
+    integer-exact f32 sums (per-site products lie in {-2..2}, so the sum
+    is reduction-order independent up to 2^24 spins). The mesh path
+    measures through ``measure.blocked_stats`` + halo edges instead."""
+    f = full.astype(jnp.float32)
+    n = jnp.float32(full.size)
+    m = jnp.sum(f) / n
+    e = -jnp.sum(f * (jnp.roll(f, -1, 0) + jnp.roll(f, -1, 1))) / n
+    return m, e
+
+
+def cluster_sweep_measured(full: jax.Array, key: jax.Array, threshold,
+                           algorithm: str = "swendsen_wang") -> tuple:
+    """Measured twin of :func:`cluster_sweep`: returns
+    ``(new_full, (m, E/spin))`` with post-flip streaming stats."""
+    new = cluster_sweep(full, key, threshold, algorithm)
+    return new, full_stats(new)

@@ -28,6 +28,10 @@ def main(argv=None):
     ap.add_argument("--pipeline", default="paper", choices=["paper", "opt"])
     ap.add_argument("--rule", default="metropolis",
                     choices=["metropolis", "heat_bath"])
+    ap.add_argument("--algo", default="metropolis",
+                    choices=["metropolis", "swendsen_wang", "wolff"],
+                    help="single-site checkerboard dynamics or the "
+                         "cluster-update plane (fast mixing at T_c)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -59,12 +63,12 @@ def main(argv=None):
     engine = IsingEngine(EngineConfig(
         size=h, width=w, beta=1.0 / t, n_sweeps=args.chunk,
         topology="mesh", mesh_shape=shape, mesh_axes=axes,
-        pipeline=args.pipeline, rule=args.rule, block_size=bs,
-        dtype=args.dtype, prob_dtype="bfloat16", measure=False,
-        hot=True), mesh=mesh)
+        pipeline=args.pipeline, rule=args.rule, algorithm=args.algo,
+        block_size=bs, dtype=args.dtype, prob_dtype="bfloat16",
+        measure=False, hot=True), mesh=mesh)
     print(f"[simulate] mesh={dict(mesh.shape)} lattice {h}x{w} "
           f"({h*w/1e6:.1f}M spins) T/Tc={args.temperature_ratio} "
-          f"dtype={args.dtype}")
+          f"dtype={args.dtype} algo={args.algo}")
 
     key = jax.random.PRNGKey(args.seed)
     start_sweep = 0
