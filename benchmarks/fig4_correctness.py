@@ -5,7 +5,14 @@ sweeps, same physics. Asserts the three claims the figure makes:
 
   1. U4 curves for different sizes cross near T_c,
   2. m(T) vanishes above T_c and saturates below,
-  3. bf16 and f32 agree to MC noise.
+  3. bf16 and f32 agree to MC noise,
+
+plus the Potts-plane twin of claim 1: the q = 3 Binder-cumulant crossing
+of the order parameter must land on the EXACT critical coupling
+beta_c(3) = ln(1 + sqrt(3)) — a parameter-free correctness gate for the
+whole ``model="potts"`` vertical slice (self-duality pins beta_c
+analytically for every q, so unlike a fitted T_c there is nothing to
+tune).
 """
 from __future__ import annotations
 
@@ -91,10 +98,77 @@ def run(sizes=(32, 64), n_sweeps=800, burnin=300, points=5, seed=0,
             and ok_crossing)
 
 
+def run_potts_crossing(sizes=(16, 32), n_sweeps=800, burnin=200, points=7,
+                       seed=0, smoke=False):
+    """q = 3 Potts U4 crossing gate at the exact beta_c = ln(1 + sqrt(3)).
+
+    One vmapped SW ensemble per lattice size scans beta in
+    [0.85, 1.15] x beta_c; the Binder cumulant of the order parameter for
+    the two sizes must separate below beta_c (larger lattice LOWER — it is
+    already deep in the disordered scaling regime), pinch together above
+    (both -> 2/3), and the zero of their difference must land within 5% of
+    the exact critical coupling.
+    """
+    import jax
+    from repro.api import EngineConfig, IsingEngine
+    from repro.potts import state as potts_state
+
+    if smoke:
+        sizes, n_sweeps, burnin = (8, 16), 400, 100
+
+    bc3 = potts_state.beta_c(3)
+    betas = np.linspace(0.85, 1.15, points) * bc3
+
+    def u4_curve(size, seed_):
+        eng = IsingEngine(EngineConfig(
+            size=size, betas=tuple(float(b) for b in betas),
+            n_sweeps=n_sweeps, model="potts", q=3,
+            algorithm="swendsen_wang"))
+        res = eng.run(eng.init(jax.random.PRNGKey(seed_)),
+                      jax.random.PRNGKey(seed_ + 1))
+        m = np.asarray(res.magnetization, np.float64)[:, burnin:]
+        m2 = (m ** 2).mean(1)
+        m4 = (m ** 4).mean(1)
+        return 1.0 - m4 / np.maximum(3.0 * m2 ** 2, 1e-300)
+
+    import time
+    t0 = time.perf_counter()
+    u_small = u4_curve(min(sizes), seed)
+    u_large = u4_curve(max(sizes), seed + 10)
+    took = time.perf_counter() - t0
+    d = u_large - u_small
+
+    print(f"# potts q=3 crossing: sizes={sizes} sweeps={n_sweeps} "
+          f"beta_c=ln(1+sqrt(3))={bc3:.5f}")
+    for b, us_, ul_, dd in zip(betas, u_small, u_large, d):
+        print(f"#   beta/beta_c={b / bc3:.3f}  U4({min(sizes)})={us_:.3f} "
+              f"U4({max(sizes)})={ul_:.3f}  d={dd:+.3f}")
+
+    ok_below = d[0] < -0.03            # clear finite-size separation
+    ok_above = (d[-2:] > -0.02).all()  # pinched together in the ordered phase
+    # zero crossing of d(beta) by linear interpolation
+    sign_change = np.nonzero((d[:-1] < 0) & (d[1:] >= 0))[0]
+    if sign_change.size:
+        i = int(sign_change[0])
+        frac = -d[i] / (d[i + 1] - d[i])
+        beta_cross = betas[i] + frac * (betas[i + 1] - betas[i])
+        ok_cross = abs(beta_cross - bc3) < 0.05 * bc3
+    else:
+        beta_cross, ok_cross = float("nan"), False
+
+    verdict = (f"separated_below={ok_below} pinched_above={ok_above} "
+               f"crossing_at_exact_beta_c={ok_cross} "
+               f"beta_cross/beta_c={beta_cross / bc3:.4f}")
+    emit("fig4_potts_q3_crossing", took, verdict)
+    return bool(ok_below and ok_above and ok_cross)
+
+
 def main(smoke=False):
     ok = run(smoke=smoke)
-    print(f"# fig4 verdict: {'PASS' if ok else 'FAIL'}")
-    return 0 if ok else 1
+    ok_potts = run_potts_crossing(smoke=smoke)
+    print(f"# fig4 verdict: {'PASS' if ok else 'FAIL'}  "
+          f"potts-crossing: {'PASS' if ok_potts else 'FAIL'}")
+    return 0 if (ok and ok_potts) else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,101 @@
+"""Potts-plane smoke benchmark + q = 2 <-> Ising equivalence gate.
+
+Two purposes, mirroring ``cluster_sweep``'s shape:
+
+* **throughput rows** — Swendsen-Wang and checkerboard heat-bath sweep
+  rates for q = 3 (site-updates per second), so the perf trajectory of the
+  new model plane is tracked in ``BENCH_potts.json`` like every other
+  section;
+* **correctness gates** —
+  (a) exact: the q = 2 bond thresholds at beta_potts = 2 beta_ising are
+      bit-identical to the Ising cluster plane's (the FK measures agree
+      exactly, not just statistically);
+  (b) statistical: a q = 2 Potts SW chain reproduces the Ising SW
+      equilibrium (|m|, E under the exact mapping E_i = 2 E_p + 2, U4) at
+      matched beta on the same lattice.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def run(size=64, n_sweeps=600, burnin=100, beta_factor=0.9, seed=0,
+        smoke=False):
+    import jax
+    from repro.api import EngineConfig, IsingEngine
+    from repro.cluster import bonds as ibonds
+    from repro.core import observables as obs
+    from repro.potts import bonds as pbonds
+    from repro.potts import state as potts_state
+
+    if smoke:
+        size, n_sweeps, burnin = 32, 300, 60
+
+    # -- throughput rows (q = 3) ------------------------------------------
+    bc3 = potts_state.beta_c(3)
+    for algo_kw, label, sweeps in ((dict(algorithm="swendsen_wang"),
+                                    "potts_q3_sw_sweep", 20),
+                                   (dict(rule="heat_bath"),
+                                    "potts_q3_heat_bath_sweep", 20)):
+        eng = IsingEngine(EngineConfig(size=size, beta=bc3,
+                                       n_sweeps=sweeps, model="potts",
+                                       q=3, measure=False, **algo_kw))
+        state = eng.init(jax.random.PRNGKey(seed))
+        key = jax.random.PRNGKey(seed + 1)
+        sec = time_fn(lambda: eng.run(state, key).state) / sweeps
+        emit(label, sec, f"{size * size / max(sec, 1e-12) / 1e6:.1f} "
+                         "Msites/s")
+
+    # -- gate (a): exact q=2 threshold identity ---------------------------
+    betas_i = (0.2, 0.35, 1.0 / obs.critical_temperature(), 0.6, 1.0)
+    ok_exact = all(pbonds.bond_threshold_u24(2.0 * b)
+                   == ibonds.bond_threshold_u24(b) for b in betas_i)
+
+    # -- gate (b): q=2 equilibrium == Ising at matched beta ---------------
+    beta_i = beta_factor / obs.critical_temperature()
+    t0 = time.perf_counter()
+    eng_i = IsingEngine(EngineConfig(size=size, beta=beta_i,
+                                     n_sweeps=n_sweeps,
+                                     algorithm="swendsen_wang",
+                                     dtype="float32"))
+    res_i = eng_i.simulate(seed=42)
+    m_i = np.abs(np.asarray(res_i.magnetization, np.float64))[burnin:]
+    e_i = np.asarray(res_i.energy, np.float64)[burnin:]
+
+    eng_p = IsingEngine(EngineConfig(size=size, beta=2.0 * beta_i,
+                                     n_sweeps=n_sweeps, model="potts",
+                                     q=2, algorithm="swendsen_wang"))
+    res_p = eng_p.simulate(seed=43)
+    m_p = np.asarray(res_p.magnetization, np.float64)[burnin:]
+    e_p = 2.0 * np.asarray(res_p.energy, np.float64)[burnin:] + 2.0
+    took = time.perf_counter() - t0
+
+    def u4(m):
+        return 1.0 - (m ** 4).mean() / max(3.0 * (m ** 2).mean() ** 2,
+                                           1e-300)
+
+    dm = abs(m_i.mean() - m_p.mean())
+    de = abs(e_i.mean() - e_p.mean())
+    du = abs(u4(m_i) - u4(m_p))
+    tol_m, tol_e, tol_u = (0.06, 0.03, 0.12) if smoke else (0.04, 0.02,
+                                                            0.08)
+    ok_equiv = dm < tol_m and de < tol_e and du < tol_u
+
+    verdict = (f"thresholds_exact={ok_exact} q2_matches_ising={ok_equiv} "
+               f"dm={dm:.4f} dE={de:.4f} dU4={du:.4f}")
+    emit("potts_q2_ising_equivalence", took, verdict)
+    print(f"# potts verdict: "
+          f"{'PASS' if ok_exact and ok_equiv else 'FAIL'}")
+    return bool(ok_exact and ok_equiv)
+
+
+def main(smoke=False):
+    return 0 if run(smoke=smoke) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,17 @@ and the measurement plane: every measured run streams running
 compiled loop — including ``pipeline='opt'``, mesh topology, and the
 Pallas backends, which used to be measurement-free-only —
 
+plus the **model axis** (``model="ising" | "potts"``): the q-state Potts
+model (:mod:`repro.potts`) runs through the same front door —
+``EngineConfig(model="potts", q=3, algorithm="swendsen_wang")`` — with
+integer-coded colour lattices, checkerboard heat-bath/Metropolis
+(``rule=``), FK-bond Swendsen-Wang/Wolff (``algorithm=``), single or mesh
+topology (sharded label merge bitwise equal to one device), and vmapped
+multi-beta ensembles. For Potts runs, ``EngineResult.magnetization``
+carries the scalar order parameter (q max_s rho_s - 1)/(q - 1) per sweep
+and ``beta`` is the Potts coupling (q = 2 maps to Ising at
+``beta_ising = beta_potts / 2``),
+
 plus the ensemble axis, which is the genuinely new capability: setting
 ``betas`` (instead of scalar ``beta``) runs R independent replicas at
 distinct temperatures in ONE jitted program — ``vmap`` over the replica
@@ -74,6 +85,7 @@ _PIPELINES = ("paper", "opt")
 _ENSEMBLES = ("independent", "tempering")
 _RULES = ("metropolis", "heat_bath")
 _ALGORITHMS = ("metropolis", "swendsen_wang", "wolff")
+_MODELS = ("ising", "potts")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +102,8 @@ class EngineConfig:
     betas: tuple = ()
     n_sweeps: int = 100
 
+    model: str = "ising"               # ising | potts
+    q: int = 0                         # Potts states (model="potts", >= 2)
     dims: int = 2                      # 2 | 3
     backend: str = "xla"               # xla | pallas | pallas_lines | ref
     topology: str = "single"           # single | mesh
@@ -125,6 +139,10 @@ class EngineConfig:
     def n_replicas(self) -> int:
         return len(self.betas)
 
+    def resolved_q(self) -> int:
+        """Number of Potts states (2 when unset — the Ising-equivalent)."""
+        return self.q or 2
+
     def probs_rule(self) -> str:
         """update_rules name for float-uniform (paper pipeline) paths."""
         return "heat_bath" if self.rule == "heat_bath" else self.accept
@@ -142,6 +160,39 @@ class EngineConfig:
                 f"betas={self.betas!r}")
         if self.dims not in (2, 3):
             err(f"dims must be 2 or 3, got {self.dims}")
+        if self.model not in _MODELS:
+            err(f"model must be one of {_MODELS}, got {self.model!r}")
+        if self.model == "potts":
+            if self.q < 2:
+                err(f"model='potts' needs q >= 2, got q={self.q}")
+            if self.q > 256:
+                err(f"q={self.q} overflows the 32-bit fixed-point colour "
+                    "draws ((u24 * q) >> 24 needs q <= 256); use a wider "
+                    "hash before raising the cap")
+            if self.dims != 2:
+                err("model='potts' is 2-D only")
+            if self.backend != "xla":
+                err("model='potts' runs on backend='xla' (the kernel "
+                    f"stack is Ising-only); got {self.backend!r}")
+            if self.pipeline != "paper":
+                err("model='potts' has no separate opt pipeline "
+                    "(acceptance is already integer-exact); "
+                    "pipeline must be 'paper'")
+            if self.ensemble != "independent":
+                err("parallel tempering is Ising-only; model='potts' "
+                    "needs ensemble='independent'")
+            if self.field:
+                err("model='potts' samples the h=0 Hamiltonian; "
+                    "field must be 0")
+            if self.topology == "mesh" and self.algorithm == "metropolis":
+                err("the sharded Potts path is the cluster plane; use "
+                    "algorithm='swendsen_wang'/'wolff' on a mesh or "
+                    "topology='single' for checkerboard dynamics")
+            if self.topology == "mesh" and self.betas:
+                err("potts ensembles are single-device (vmapped); "
+                    "use topology='single' for multi-beta potts runs")
+        elif self.q:
+            err(f"q={self.q} applies to model='potts' only")
         if self.backend not in _BACKENDS:
             err(f"backend must be one of {_BACKENDS}, got {self.backend!r}")
         if self.topology not in _TOPOLOGIES:
@@ -281,13 +332,17 @@ class EngineResult:
 
     state:          final lattice state (layout depends on the scenario —
                     quads [4, R, C], replicas [Rr, 4, R, C], blocked
-                    [4, MR, MC, bs, bs] on a mesh, or [D, H, W] in 3-D)
+                    [4, MR, MC, bs, bs] on a mesh, [D, H, W] in 3-D, or
+                    int32 colour views [H, W] / [Rr, H, W] / blocked for
+                    model="potts")
     magnetization:  per-sweep m, shape [T] or [n_replicas, T] (None when
                     measure=False, or on mesh/opt fori_loop runs which
-                    stream moments instead of a series)
+                    stream moments instead of a series); for Potts runs
+                    this channel carries the order parameter
+                    (q max_s rho_s - 1)/(q - 1)
     energy:         per-sweep E/spin, same shape (None when unmeasured)
     moments:        streamed running averages over the measured sweeps —
-                    dict with m_abs, E, m2, m4, U4, n_samples (scalars, or
+                    dict with m_abs, E, m2, m4, E2, U4, n_samples (scalars, or
                     arrays of shape [n_replicas] for ensembles). Present on
                     every measured run EXCEPT tempering (which reports the
                     per-round |m| series and swap fraction only); for
@@ -371,6 +426,11 @@ class IsingEngine:
 
     def _scenario(self) -> str:
         c = self.cfg
+        if c.model == "potts":
+            if c.algorithm != "metropolis":
+                return ("potts_cluster_mesh" if c.topology == "mesh"
+                        else "potts_cluster")
+            return "potts_cb"
         if c.dims == 3:
             return "3d"
         if c.algorithm != "metropolis":
@@ -423,8 +483,12 @@ class IsingEngine:
     def _auto_hot(self, beta: float) -> bool:
         if self.cfg.hot is not None:
             return self.cfg.hot
-        beta_c = (I3.BETA_C_3D if self.cfg.dims == 3
-                  else 1.0 / obs.critical_temperature())
+        if self.cfg.model == "potts":
+            from repro.potts import state as potts_state
+            beta_c = potts_state.beta_c(self.cfg.resolved_q())
+        else:
+            beta_c = (I3.BETA_C_3D if self.cfg.dims == 3
+                      else 1.0 / obs.critical_temperature())
         return beta < beta_c  # hot start in the disordered phase
 
     def init(self, key: jax.Array) -> jax.Array:
@@ -439,6 +503,8 @@ class IsingEngine:
         c = self.cfg
         dt = jnp.dtype(c.dtype)
         scen = self._scenario()
+        if scen.startswith("potts"):
+            return self._init_potts(key)
         if scen == "3d":
             n = c.size
             if self._auto_hot(c.beta):
@@ -467,6 +533,30 @@ class IsingEngine:
             return jax.device_put(qb, self.lattice_sharding())
         return sampler.init_state(key, c.size, c.resolved_width(), dt,
                                   hot=self._auto_hot(c.beta))
+
+    def _init_potts(self, key: jax.Array) -> jax.Array:
+        """Potts colour states: full [H, W] int32 (single device),
+        [R, H, W] replica stacks, or blocked [4, MR, MC, bs, bs] on a mesh
+        — the same replica/hot-cold conventions as the Ising layouts."""
+        from repro.potts import state as potts_state
+        c = self.cfg
+        q = c.resolved_q()
+        h, w = c.size, c.resolved_width()
+
+        def one(k, beta):
+            return (potts_state.random_state(k, h, w, q)
+                    if self._auto_hot(beta) else potts_state.cold_state(h, w))
+
+        if c.betas:
+            return jnp.stack([one(jax.random.fold_in(key, i), b)
+                              for i, b in enumerate(c.betas)])
+        full = one(key, c.beta)
+        if c.topology == "mesh":
+            quads = L.to_quads(full)
+            bs = c.resolved_block_size()
+            qb = jnp.stack([L.block(quads[i], bs) for i in range(4)])
+            return jax.device_put(qb, self.lattice_sharding())
+        return full
 
     # ------------------------------------------------------------------
     # Compiled runners (cached per engine)
@@ -651,6 +741,107 @@ class IsingEngine:
                 n_sweeps, *args)
         return self._runner_cache[key_]
 
+    def _potts_cb_runner(self):
+        """Checkerboard Potts chain (heat-bath or Metropolis per ``rule``)
+        on the full [H, W] colour view; multi-beta via the shared replica
+        harness with traced betas (thresholds rebuilt in-trace, bitwise
+        equal to the static tables — see ``potts.rules``)."""
+        from repro.potts import rules as potts_rules
+        c = self.cfg
+        q = c.resolved_q()
+        rule = c.rule
+
+        if not c.betas:
+            def run(state, key):
+                if not c.measure:
+                    def body(step, f):
+                        return potts_rules.checkerboard_sweep(
+                            f, jax.random.fold_in(key, step), c.beta, q,
+                            rule)
+                    return (jax.lax.fori_loop(0, c.n_sweeps, body, state),
+                            None, None)
+
+                def body(f, step):
+                    return potts_rules.checkerboard_sweep_measured(
+                        f, jax.random.fold_in(key, step), c.beta, q, rule)
+
+                final, (ms, es) = jax.lax.scan(body, state,
+                                               jnp.arange(c.n_sweeps))
+                return final, ms, es
+
+            return jax.jit(run)
+
+        betas = jnp.asarray(c.betas, jnp.float32)
+
+        def one_sweep(f, k, beta, step):
+            return potts_rules.checkerboard_sweep(
+                f, jax.random.fold_in(k, step), beta, q, rule)
+
+        def one_sweep_measured(f, k, beta, step):
+            return potts_rules.checkerboard_sweep_measured(
+                f, jax.random.fold_in(k, step), beta, q, rule)
+
+        return self._replica_harness(one_sweep, one_sweep_measured, betas)
+
+    def _potts_cluster_runner(self):
+        """Swendsen-Wang / Wolff Potts chain on the full [H, W] colour
+        view — same structure as the Ising ``_cluster_runner`` with the
+        Potts bond threshold p = 1 - exp(-beta) and per-cluster colour
+        draws; multi-beta via traced thresholds."""
+        from repro.potts import bonds as potts_bonds
+        from repro.potts import sweep as potts_sweep
+        c = self.cfg
+        q = c.resolved_q()
+        algo = c.algorithm
+
+        if not c.betas:
+            t24 = potts_bonds.bond_threshold_u24(c.beta)
+
+            def run(state, key):
+                if not c.measure:
+                    def body(step, f):
+                        return potts_sweep.cluster_sweep(
+                            f, jax.random.fold_in(key, step), t24, q, algo)
+                    return (jax.lax.fori_loop(0, c.n_sweeps, body, state),
+                            None, None)
+
+                def body(f, step):
+                    return potts_sweep.cluster_sweep_measured(
+                        f, jax.random.fold_in(key, step), t24, q, algo)
+
+                final, (ms, es) = jax.lax.scan(body, state,
+                                               jnp.arange(c.n_sweeps))
+                return final, ms, es
+
+            return jax.jit(run)
+
+        thresholds = potts_bonds.bond_threshold_traced(
+            jnp.asarray(c.betas, jnp.float32))
+
+        def one_sweep(f, k, t, step):
+            return potts_sweep.cluster_sweep(
+                f, jax.random.fold_in(k, step), t, q, algo)
+
+        def one_sweep_measured(f, k, t, step):
+            return potts_sweep.cluster_sweep_measured(
+                f, jax.random.fold_in(k, step), t, q, algo)
+
+        return self._replica_harness(one_sweep, one_sweep_measured,
+                                     thresholds)
+
+    def _potts_cluster_mesh_runner(self, n_sweeps: int,
+                                   measured: bool = False):
+        from repro.potts import mesh as potts_mesh
+        key_ = ("potts_cluster_mesh", n_sweeps, measured)
+        if key_ not in self._runner_cache:
+            make = (potts_mesh.make_potts_run_fn if measured
+                    else potts_mesh.make_potts_sweeps_fn)
+            args = ((self.cfg.measure_every,) if measured else ())
+            self._runner_cache[key_] = make(
+                self.mesh, self._dist_cfg(), self.cfg.resolved_q(),
+                self.cfg.algorithm, n_sweeps, *args)
+        return self._runner_cache[key_]
+
     def _mesh_runner(self, n_sweeps: int, measured: bool = False):
         from repro.distributed import ising as dising
         key_ = ("mesh", n_sweeps, measured)
@@ -712,13 +903,14 @@ class IsingEngine:
                     state, key)
                 return EngineResult(final, moments=measure.finalize(mom))
             return EngineResult(self._mesh_runner(c.n_sweeps)(state, key))
-        if scen == "cluster_mesh":
+        if scen in ("cluster_mesh", "potts_cluster_mesh"):
+            runner = (self._potts_cluster_mesh_runner
+                      if scen == "potts_cluster_mesh"
+                      else self._cluster_mesh_runner)
             if c.measure:
-                final, mom = self._cluster_mesh_runner(
-                    c.n_sweeps, measured=True)(state, key)
+                final, mom = runner(c.n_sweeps, measured=True)(state, key)
                 return EngineResult(final, moments=measure.finalize(mom))
-            return EngineResult(
-                self._cluster_mesh_runner(c.n_sweeps)(state, key))
+            return EngineResult(runner(c.n_sweeps)(state, key))
         runner_key = scen
         if runner_key not in self._runner_cache:
             self._runner_cache[runner_key] = {
@@ -727,13 +919,16 @@ class IsingEngine:
                 "cluster": self._cluster_runner,
                 "opt": self._opt_runner,
                 "3d": self._runner_3d,
+                "potts_cb": self._potts_cb_runner,
+                "potts_cluster": self._potts_cluster_runner,
             }[scen]()
         out = self._runner_cache[runner_key](state, key)
         final, ms, es = out[:3]
         mom = (measure.finalize(out[3]) if len(out) > 3 and out[3] is not None
                else self._series_moments(ms, es))
         extra = ({"betas": c.betas}
-                 if c.betas and scen in ("ensemble", "cluster") else {})
+                 if c.betas and scen in ("ensemble", "cluster", "potts_cb",
+                                         "potts_cluster") else {})
         return EngineResult(final, ms, es, mom, extra)
 
     def _series_moments(self, ms, es) -> Optional[dict]:
@@ -768,6 +963,8 @@ class IsingEngine:
         scen = self._scenario()
         if scen == "cluster_mesh":
             return self._cluster_mesh_runner(n_sweeps)(state, key)
+        if scen == "potts_cluster_mesh":
+            return self._potts_cluster_mesh_runner(n_sweeps)(state, key)
         if scen != "mesh":
             _config_error("run_sweeps(n_sweeps=...) is the chunked mesh "
                           "runner; use run() elsewhere")
@@ -786,14 +983,22 @@ class IsingEngine:
         """Exact global (m, E/spin) of a mesh/opt blocked state without
         gathering it — one jitted shard_map psum over the sharded lattice
         (the streaming plane's standalone entry point; supersedes the old
-        magnetization-only logging helper)."""
-        if self._scenario() not in ("mesh", "opt", "cluster_mesh"):
+        magnetization-only logging helper). For Potts meshes ``m`` is the
+        order parameter and ``E`` the agreement-bond energy."""
+        scen = self._scenario()
+        if scen not in ("mesh", "opt", "cluster_mesh",
+                        "potts_cluster_mesh"):
             _config_error("stats(state) reads the sharded blocked layout; "
                           "use run() results elsewhere")
         if "global_stats" not in self._runner_cache:
-            from repro.distributed import ising as dising
-            self._runner_cache["global_stats"] = dising.global_stats(
-                self.mesh, self._dist_cfg())
+            if scen == "potts_cluster_mesh":
+                from repro.potts import mesh as potts_mesh
+                self._runner_cache["global_stats"] = potts_mesh.global_stats(
+                    self.mesh, self._dist_cfg(), self.cfg.resolved_q())
+            else:
+                from repro.distributed import ising as dising
+                self._runner_cache["global_stats"] = dising.global_stats(
+                    self.mesh, self._dist_cfg())
         m, e = self._runner_cache["global_stats"](state)
         return float(m), float(e)
 

@@ -84,19 +84,40 @@ def _device_geometry(qb_local, cfg, nrows: int, ncols: int):
     return lh, lw, roff, coff, H, W, gi
 
 
-def _local_cluster_sweep(lf, key, cfg, algorithm, threshold, geometry,
-                         nrows, ncols):
-    """One SW/Wolff update of the device-local full view ``lf``."""
-    lh, lw, roff, coff, H, W, gi = geometry
-    kb = jax.random.fold_in(key, 0)
-
-    # -- 1. bonds (with spin halos at device boundaries) -------------------
+def halo_east_south(lf, cfg, nrows: int, ncols: int) -> tuple:
+    """(east, south) neighbour-value arrays of a device-local full view:
+    local torus rolls with the wrap line replaced by the neighbouring
+    device's boundary line (one ``ppermute`` per real device edge).
+    Spin-model agnostic — shared by the bond stage here and the Potts
+    measurement plane (:mod:`repro.potts.mesh`)."""
     east = jnp.roll(lf, -1, 1)
     south = jnp.roll(lf, -1, 0)
     if ncols > 1:
         east = east.at[:, -1].set(_shift(lf[:, 0], cfg.col_axes, ncols, -1))
     if nrows > 1:
-        south = south.at[-1, :].set(_shift(lf[0, :], cfg.row_axes, nrows, -1))
+        south = south.at[-1, :].set(
+            _shift(lf[0, :], cfg.row_axes, nrows, -1))
+    return east, south
+
+
+def global_labels_local(lf, key, cfg, threshold, geometry, nrows, ncols):
+    """Stages 1-3 of a sharded cluster sweep: FK bonds with spin halos,
+    device-local labeling, and the ppermute/segment_min global merge.
+
+    Returns the device-local ``[lh, lw]`` patch of the *global* canonical
+    (per-cluster minimum global index) labels — bitwise what the
+    single-device ``label_components`` produces on the full lattice.
+
+    Spin-model agnostic: bonds activate on *equality* of ``lf`` entries,
+    so +-1 Ising spins and integer Potts colours (:mod:`repro.potts.mesh`)
+    share this machinery; only ``threshold`` and the per-cluster decision
+    applied afterwards differ.
+    """
+    lh, lw, roff, coff, H, W, gi = geometry
+    kb = jax.random.fold_in(key, 0)
+
+    # -- 1. bonds (with spin halos at device boundaries) -------------------
+    east, south = halo_east_south(lf, cfg, nrows, ncols)
     br, bd = B.fk_bonds(lf, kb, threshold, east=east, south=south, gi=gi)
 
     # Boundary bonds owned by the west/north neighbour, recomputed locally
@@ -153,6 +174,15 @@ def _local_cluster_sweep(lf, key, cfg, algorithm, threshold, geometry,
             return new, changed
 
         glab, _ = lax.while_loop(cond, body, (glab, jnp.bool_(True)))
+    return glab
+
+
+def _local_cluster_sweep(lf, key, cfg, algorithm, threshold, geometry,
+                         nrows, ncols):
+    """One SW/Wolff update of the device-local full view ``lf``."""
+    lh, lw, roff, coff, H, W, gi = geometry
+    glab = global_labels_local(lf, key, cfg, threshold, geometry,
+                               nrows, ncols)
 
     # -- 4. per-cluster flip (gather-free label hash) ----------------------
     if algorithm == "swendsen_wang":

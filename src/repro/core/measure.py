@@ -28,9 +28,10 @@ Three consumers, one code path:
 * the compact [4, R, C] sweep loop (``sweep_compact_measured``) which
   reuses the white-update nn tensors at zero extra matmul cost.
 
-:class:`Moments` accumulates running ``(|m|, E, m^2, m^4)`` sums with
+:class:`Moments` accumulates running ``(|m|, E, m^2, m^4, E^2)`` sums with
 ``measure_every`` thinning inside compiled loops — the paper's Fig.-4
-statistics stream out of a measurement-free-speed loop without ever
+statistics (plus the specific-heat-bearing E^2 and susceptibility-bearing
+m^2 fluctuations) stream out of a measurement-free-speed loop without ever
 materializing a time series on the host.
 """
 from __future__ import annotations
@@ -131,25 +132,31 @@ def sweep_compact_measured(quads: jax.Array, probs: jax.Array, beta,
 class Moments(NamedTuple):
     """Running sums of the Fig.-4 statistics (scalars, f32).
 
-    ``n`` counts accumulated samples; ``m_abs``/``e``/``m2``/``m4`` are
-    sums of |m|, E/spin, m^2, m^4. The ``c_*`` fields carry Kahan
-    compensation for the value sums: plain f32 accumulation stalls once a
-    sum outgrows its per-sweep increment by ~2^24 (a few million sweeps —
-    exactly the run lengths the streaming plane targets); compensated
-    summation keeps the running error at one ulp regardless of chain
-    length. A NamedTuple so it scans/psums/vmaps as a pytree.
+    ``n`` counts accumulated samples; ``m_abs``/``e``/``m2``/``m4``/``e2``
+    are sums of |m|, E/spin, m^2, m^4, E^2 (the E^2 stream is what lets
+    the mesh/opt/kernel fori_loop paths report specific heat
+    C = beta^2 N (<E^2> - <E>^2) without ever keeping a per-sweep E trace
+    — see :func:`repro.core.observables.specific_heat_from_moments`).
+    The ``c_*`` fields carry Kahan compensation for the value sums: plain
+    f32 accumulation stalls once a sum outgrows its per-sweep increment by
+    ~2^24 (a few million sweeps — exactly the run lengths the streaming
+    plane targets); compensated summation keeps the running error at one
+    ulp regardless of chain length. A NamedTuple so it scans/psums/vmaps
+    as a pytree.
     """
     n: jax.Array
     m_abs: jax.Array
     e: jax.Array
     m2: jax.Array
     m4: jax.Array
+    e2: jax.Array
     c_m_abs: jax.Array
     c_e: jax.Array
     c_m2: jax.Array
     c_m4: jax.Array
+    c_e2: jax.Array
 
-N_FIELDS = 9
+N_FIELDS = 11
 
 
 def init_moments(batch_shape=()) -> Moments:
@@ -185,10 +192,11 @@ def accumulate(mom: Moments, m: jax.Array, e: jax.Array,
     s2, c2 = _kahan_add(mom.e, mom.c_e, w * e)
     s3, c3 = _kahan_add(mom.m2, mom.c_m2, w * m * m)
     s4, c4 = _kahan_add(mom.m4, mom.c_m4, w * m ** 4)
+    s5, c5 = _kahan_add(mom.e2, mom.c_e2, w * e * e)
     # n grows by exact integers: exact in f32 to 2^24 samples, and the
     # f64 finalize below reads it before that matters at realistic
     # measure_every settings.
-    return Moments(mom.n + w, s1, s2, s3, s4, c1, c2, c3, c4)
+    return Moments(mom.n + w, s1, s2, s3, s4, s5, c1, c2, c3, c4, c5)
 
 
 def finalize(mom: Moments) -> dict:
@@ -196,7 +204,8 @@ def finalize(mom: Moments) -> dict:
     the Kahan compensation terms fold back in here).
 
     Keys match :func:`repro.core.observables.chain_statistics`:
-    m_abs, m2, m4, U4, E, n_samples.
+    m_abs, m2, m4, U4, E, E2, n_samples (E2 feeds
+    ``observables.specific_heat_from_moments``).
     """
     import numpy as np
 
@@ -208,9 +217,10 @@ def finalize(mom: Moments) -> dict:
     e = total(mom.e, mom.c_e) / n
     m2 = total(mom.m2, mom.c_m2) / n
     m4 = total(mom.m4, mom.c_m4) / n
+    e2 = total(mom.e2, mom.c_e2) / n
     u4 = 1.0 - m4 / np.maximum(3.0 * m2 ** 2, 1e-300)
     out = {"m_abs": m_abs, "m2": m2, "m4": m4, "U4": u4, "E": e,
-           "n_samples": np.asarray(mom.n, np.float64)}
+           "E2": e2, "n_samples": np.asarray(mom.n, np.float64)}
     if np.ndim(n) == 0:
         out = {k: (int(v) if k == "n_samples" else float(v))
                for k, v in out.items()}
@@ -233,4 +243,5 @@ def moments_from_series(ms, es, burnin: int = 0,
                    jnp.asarray(e.sum(-1), jnp.float32),
                    jnp.asarray((m * m).sum(-1), jnp.float32),
                    jnp.asarray((m ** 4).sum(-1), jnp.float32),
-                   z, z, z, z)
+                   jnp.asarray((e * e).sum(-1), jnp.float32),
+                   z, z, z, z, z)

@@ -58,6 +58,38 @@ def specific_heat(e_samples, beta: float, n_spins: int) -> float:
     return float(beta ** 2 * n_spins * (np.mean(e ** 2) - np.mean(e) ** 2))
 
 
+def specific_heat_from_moments(moments: dict, beta: float,
+                               n_spins: int):
+    """C from a *streamed* moments dict (``measure.finalize`` output):
+    C = beta^2 * N * (E2 - E^2). The mesh/opt/kernel fori_loop paths never
+    keep a per-sweep E trace, so this is the only way to get C there —
+    the E^2 accumulator makes the fluctuation available without one.
+    Scalar or per-replica array, matching the moments shape.
+
+    Precision note: each e^2 sample is f32-rounded before accumulation
+    (~1.2e-7 relative), while the fluctuation <E^2> - <E>^2 shrinks as
+    C/(beta^2 N) — so beyond N ~ 10^6..10^7 spins the streamed C is
+    rounding-noise dominated (the per-sweep-trace estimator on scan paths
+    is f64 and unaffected). A mean-shifted accumulator is the planned fix
+    (see ROADMAP); at test/bench scales the two agree to ~1e-3."""
+    import numpy as np
+    e = np.asarray(moments["E"], np.float64)
+    e2 = np.asarray(moments["E2"], np.float64)
+    c = beta ** 2 * n_spins * (e2 - e ** 2)
+    return float(c) if np.ndim(c) == 0 else c
+
+
+def susceptibility_from_moments(moments: dict, beta: float,
+                                n_spins: int):
+    """chi from a streamed moments dict: beta * N * (m2 - m_abs^2)
+    (the |m| convention of :func:`susceptibility`)."""
+    import numpy as np
+    m2 = np.asarray(moments["m2"], np.float64)
+    m_abs = np.asarray(moments["m_abs"], np.float64)
+    chi = beta * n_spins * (m2 - m_abs ** 2)
+    return float(chi) if np.ndim(chi) == 0 else chi
+
+
 def autocorrelation(samples, c: float = 5.0, max_lag: int = 0) -> tuple:
     """(tau, window): integrated autocorrelation time with Sokal's
     self-consistent truncation.

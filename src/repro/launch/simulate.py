@@ -32,9 +32,18 @@ def main(argv=None):
                     choices=["metropolis", "swendsen_wang", "wolff"],
                     help="single-site checkerboard dynamics or the "
                          "cluster-update plane (fast mixing at T_c)")
+    ap.add_argument("--model", default="ising", choices=["ising", "potts"],
+                    help="spin model; potts requires --q and a cluster "
+                         "--algo on a mesh")
+    ap.add_argument("--q", type=int, default=0,
+                    help="Potts states (>= 2, with --model potts); "
+                         "temperature-ratio is then relative to the exact "
+                         "T_c(q) = 1/ln(1+sqrt(q))")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.model == "potts" and args.q < 2:
+        ap.error("--model potts requires --q >= 2 (e.g. --q 3)")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -59,22 +68,32 @@ def main(argv=None):
     mc = args.blocks_per_device * ncols
     h, w = 2 * mr * bs, 2 * mc * bs
 
-    t = args.temperature_ratio * obs.critical_temperature()
+    if args.model == "potts":
+        from repro.potts import state as potts_state
+        tc = 1.0 / potts_state.beta_c(args.q)
+    else:
+        tc = obs.critical_temperature()
+    t = args.temperature_ratio * tc
     engine = IsingEngine(EngineConfig(
         size=h, width=w, beta=1.0 / t, n_sweeps=args.chunk,
         topology="mesh", mesh_shape=shape, mesh_axes=axes,
+        model=args.model, q=args.q,
         pipeline=args.pipeline, rule=args.rule, algorithm=args.algo,
         block_size=bs, dtype=args.dtype, prob_dtype="bfloat16",
         measure=False, hot=True), mesh=mesh)
     print(f"[simulate] mesh={dict(mesh.shape)} lattice {h}x{w} "
-          f"({h*w/1e6:.1f}M spins) T/Tc={args.temperature_ratio} "
+          f"({h*w/1e6:.1f}M spins) model={args.model}"
+          f"{f'(q={args.q})' if args.model == 'potts' else ''} "
+          f"T/Tc={args.temperature_ratio} "
           f"dtype={args.dtype} algo={args.algo}")
 
     key = jax.random.PRNGKey(args.seed)
     start_sweep = 0
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         start_sweep = ckpt.latest_step(args.ckpt_dir)
-        like = {"qb": jnp.zeros((4, mr, mc, bs, bs), jnp.dtype(args.dtype))}
+        state_dt = (jnp.int32 if args.model == "potts"
+                    else jnp.dtype(args.dtype))
+        like = {"qb": jnp.zeros((4, mr, mc, bs, bs), state_dt)}
         sh = {"qb": engine.lattice_sharding()}
         qb = ckpt.restore(args.ckpt_dir, like, shardings=sh)["qb"]
         print(f"[simulate] restored lattice at sweep {start_sweep}")

@@ -1,0 +1,23 @@
+"""q-state Potts model plane: one spin-model family across every layer.
+
+Modules mirror the Ising stack one-to-one:
+
+* :mod:`repro.potts.state`  — integer-coded colour lattices, agreement
+  counts from the 4-roll primitive, order parameter + energy observables;
+* :mod:`repro.potts.rules`  — checkerboard heat-bath / Metropolis with
+  u24 cumulative-threshold categorical draws (f32-exact);
+* :mod:`repro.potts.bonds`  — FK bond activation p = 1 - exp(-beta) on
+  equal-colour edges, shared counter-based per-bond RNG;
+* :mod:`repro.potts.sweep`  — single-device Swendsen-Wang / Wolff with
+  gather-free per-cluster colour draws;
+* :mod:`repro.potts.mesh`   — sharded SW/Wolff reusing the cluster plane's
+  ppermute boundary-label merge, bitwise equal to one device.
+
+Front door: ``EngineConfig(model="potts", q=...)``.
+"""
+from repro.potts.state import (  # noqa: F401
+    beta_c, random_state, cold_state, order_parameter, energy_per_spin,
+    full_stats,
+)
+from repro.potts.sweep import cluster_sweep, labels_for  # noqa: F401
+from repro.potts.rules import checkerboard_sweep  # noqa: F401

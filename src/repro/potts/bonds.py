@@ -1,0 +1,67 @@
+"""Fortuin-Kasteleyn bonds for the q-state Potts model.
+
+The FK representation generalizes verbatim from Ising: a bond between two
+*equal-colour* neighbours activates with probability
+
+    p = 1 - exp(-beta * J)          (J = 1)
+
+and never between unequal colours; assigning every resulting cluster an
+independent uniformly-random colour in {0..q-1} (Swendsen-Wang) preserves
+the Boltzmann measure for ANY q. Note the missing factor of 2 relative to
+the Ising module: the Potts delta-coupling is half the Ising product
+coupling, so at the q=2 correspondence ``beta_potts = 2 * beta_ising`` the
+two bond probabilities — and their u24 thresholds — are bit-identical
+(pinned in ``tests/test_potts.py``).
+
+Everything else is shared machinery from :mod:`repro.cluster.bonds`: the
+equality compare in ``fk_bonds`` works unchanged on integer colours, the
+counter-based per-bond RNG hashes global bond indices, and the u24
+integer-threshold compare is bitwise the f32 probability compare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import bonds as B
+from repro.core import update_rules
+
+_U24 = 1 << 24
+
+# Shared cluster-plane primitives, re-exported for Potts call sites.
+counter_bits = B.counter_bits
+global_index = B.global_index
+fk_bonds = B.fk_bonds          # equality compare: colour-agnostic
+active = B.active
+bond_bits = B.bond_bits
+
+
+def bond_prob_f32(beta) -> float:
+    """p = 1 - exp(-beta) in f32 — same ops as the traced twin below."""
+    return float(1.0 - jnp.exp(-jnp.float32(beta)))
+
+
+def bond_threshold_u24(beta) -> int:
+    """ceil(p * 2^24) for p = f32(1 - exp(-beta)) (host int, static beta)."""
+    return update_rules._thresholds_u24([bond_prob_f32(beta)])[0]
+
+
+def bond_threshold_traced(beta: jax.Array) -> jax.Array:
+    """Traced-beta twin of :func:`bond_threshold_u24` (uint32 scalar);
+    bitwise equal for every f32 beta (exact 2^24 scaling + ceil)."""
+    p = 1.0 - jnp.exp(-jnp.asarray(beta, jnp.float32))
+    t = jnp.ceil(p * jnp.float32(_U24)).astype(jnp.uint32)
+    return jnp.minimum(t, jnp.uint32(_U24))
+
+
+def cluster_states(bits: jax.Array, q: int) -> jax.Array:
+    """Uniform colour in {0..q-1} per hash word: ``(u24 * q) >> 24``.
+
+    Sites sharing a cluster label share ``bits`` (a hash of the label), so
+    every site of a cluster draws the same colour — the gather-free
+    per-cluster assignment. Bias is < q/2^24 per colour. At q = 2 this is
+    exactly the top hash bit, matching the Ising SW coin convention.
+    Requires q <= 256: the u24 * q product must fit in 32 bits (enforced
+    by EngineConfig validation).
+    """
+    return ((bits >> 8) * jnp.uint32(q) >> 24).astype(jnp.int32)

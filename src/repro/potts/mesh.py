@@ -1,0 +1,159 @@
+"""Sharded q-state Potts cluster updates under ``shard_map``.
+
+Thin Potts layer over the sharded cluster machinery in
+:mod:`repro.cluster.mesh`: the colour lattice lives in the same blocked
+``[4, MR, MC, bs, bs]`` layout (int32 colours instead of +-1 spins), each
+sweep reconstructs the device-local full view, and
+:func:`repro.cluster.mesh.global_labels_local` runs unchanged — FK bonds
+activate on colour *equality* with the Potts threshold p = 1 - exp(-beta),
+halo spin lines arrive by ``ppermute``, local labels merge to canonical
+global minima through the same ``segment_min`` while_loop.
+
+Only the per-cluster decision is new, and it stays gather-free:
+
+* Swendsen-Wang: every site hashes its (globally merged) cluster label and
+  maps the hash to a uniform colour (``potts.bonds.cluster_states``) — all
+  sites of a cluster agree without any cross-device traffic.
+* Wolff: the seed site and the colour shift are drawn from the replicated
+  sweep key; the seed's label is recovered with one masked-sum ``psum``,
+  and the shift formula ``(sigma + shift) % q`` is constant over the
+  (monochrome) cluster, so no cluster-colour gather is needed either.
+
+Every random decision is a counter hash of global indices or a draw from
+the replicated key, so the sharded chain is **bitwise identical** to
+:mod:`repro.potts.sweep` on one device (pinned in ``tests/test_potts.py``
+on 2x2 and 4x1 shard grids).
+
+Measurement streams the Potts order parameter (q * max_s rho_s - 1)/(q - 1)
+from ``psum``-reduced colour counts and the bond energy from halo-corrected
+agreement sums — integer-exact f32, accumulated into running
+:class:`repro.core.measure.Moments` (including the streamed E^2 for
+specific heat).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.cluster import mesh as cmesh
+from repro.core import measure
+from repro.distributed import halo
+from repro.distributed import ising as dising
+from repro.potts import bonds as PB
+from repro.potts import sweep as psweep
+
+
+def _local_potts_sweep(lf, key, cfg, q, algorithm, threshold, geometry,
+                       nrows, ncols):
+    """One SW/Wolff colour update of the device-local full view ``lf``."""
+    lh, lw, roff, coff, H, W, gi = geometry
+    glab = cmesh.global_labels_local(lf, key, cfg, threshold, geometry,
+                                     nrows, ncols)
+    if algorithm == "swendsen_wang":
+        kf = jax.random.fold_in(key, psweep._K_COINS)
+        return PB.cluster_states(PB.counter_bits(kf, glab), q)
+    if algorithm == "wolff":
+        ks = jax.random.fold_in(key, psweep._K_SEED)
+        seed = jax.random.randint(ks, (), 0, H * W)
+        local = jnp.sum(jnp.where(gi == seed, glab, 0))
+        seed_label = lax.psum(local, dising._stats_axes(cfg))
+        shift = psweep.wolff_target_shift(key, q)
+        return jnp.where(glab == seed_label, (lf + shift) % q, lf)
+    raise ValueError(f"unknown cluster algorithm {algorithm!r}; "
+                     f"use one of {psweep.ALGORITHMS}")
+
+
+def _local_stats(lf, cfg, q, nrows, ncols, n_spins, axes):
+    """(order parameter, E/spin) of the device-local patch, psum-reduced.
+
+    Bond energy counts east/south colour agreements with halo-corrected
+    neighbour lines (each bond once); colour populations psum into the
+    global max-density order parameter. All sums integer-exact in f32.
+    """
+    from repro.potts import state as PS
+    east, south = cmesh.halo_east_south(lf, cfg, nrows, ncols)
+    agree = (jnp.sum((lf == east).astype(jnp.float32))
+             + jnp.sum((lf == south).astype(jnp.float32)))
+    e = -lax.psum(agree, axes) / jnp.float32(n_spins)
+    counts = PS.state_counts(lf, q, axis_names=axes)
+    order = PS.order_parameter_from_counts(counts, q, n_spins)
+    return order, e
+
+
+def _make_runner(mesh, cfg, q, algorithm, n_sweeps, measure_every, measured):
+    nrows = halo.axis_size(mesh, cfg.row_axes)
+    ncols = halo.axis_size(mesh, cfg.col_axes)
+    spec = dising.lattice_spec(cfg)
+    axes = dising._stats_axes(cfg)
+    threshold = PB.bond_threshold_u24(cfg.beta)
+    n_dev = nrows * ncols
+
+    def local_run(qb, key):
+        bs = qb.shape[-1]
+        geom = cmesh._device_geometry(qb, cfg, nrows, ncols)
+        n_spins = 4 * qb[0].size * n_dev
+
+        def sweep_once(step, qb):
+            lf = cmesh._local_full(qb)
+            k = jax.random.fold_in(key, step)
+            new = _local_potts_sweep(lf, k, cfg, q, algorithm, threshold,
+                                     geom, nrows, ncols)
+            return cmesh._local_blocked(new, bs)
+
+        if not measured:
+            return lax.fori_loop(0, n_sweeps, sweep_once, qb)
+
+        def body(step, carry):
+            qb, mom = carry
+            qb = sweep_once(step, qb)
+            m, e = _local_stats(cmesh._local_full(qb), cfg, q, nrows,
+                                ncols, n_spins, axes)
+            mom = measure.accumulate(mom, m, e, step, measure_every)
+            return qb, mom
+
+        qb, mom = lax.fori_loop(0, n_sweeps, body,
+                                (qb, measure.init_moments()))
+        return qb, mom
+
+    out_specs = ((spec, measure.Moments(*([P()] * measure.N_FIELDS)))
+                 if measured else spec)
+    mapped = shard_map(local_run, mesh=mesh, check_vma=False,
+                       in_specs=(spec, P()), out_specs=out_specs)
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
+def make_potts_run_fn(mesh, cfg, q: int, algorithm: str, n_sweeps: int,
+                      measure_every: int = 1):
+    """Measured sharded Potts cluster chain:
+    ``run(qb_global, key) -> (qb_global, Moments)``."""
+    return _make_runner(mesh, cfg, q, algorithm, n_sweeps, measure_every,
+                        True)
+
+
+def make_potts_sweeps_fn(mesh, cfg, q: int, algorithm: str, n_sweeps: int):
+    """Measurement-free sharded Potts cluster chain:
+    ``run(qb_global, key) -> qb_global``."""
+    return _make_runner(mesh, cfg, q, algorithm, n_sweeps, 1, False)
+
+
+def global_stats(mesh, cfg, q: int):
+    """Jitted ``stats(qb_global) -> (order, E/spin)`` over the sharded
+    blocked colour lattice — the Potts twin of
+    ``distributed.ising.global_stats`` (exact psums, no lattice gather)."""
+    nrows = halo.axis_size(mesh, cfg.row_axes)
+    ncols = halo.axis_size(mesh, cfg.col_axes)
+    spec = dising.lattice_spec(cfg)
+    axes = dising._stats_axes(cfg)
+    n_dev = nrows * ncols
+
+    def local_stats(qb):
+        n_spins = 4 * qb[0].size * n_dev
+        return _local_stats(cmesh._local_full(qb), cfg, q, nrows, ncols,
+                            n_spins, axes)
+
+    mapped = shard_map(local_stats, mesh=mesh, check_vma=False,
+                       in_specs=(spec,), out_specs=(P(), P()))
+    return jax.jit(mapped)

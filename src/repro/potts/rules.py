@@ -1,0 +1,183 @@
+"""Checkerboard single-site Potts dynamics: heat-bath and Metropolis.
+
+Both rules update one parity class at a time on the full ``[H, W]`` int
+view — sites with ``(i + j) % 2 == color`` read only opposite-colour
+neighbours, so each half-update is an exact conditional resample / accept
+step, the same validity argument as the Ising checkerboard (paper §3.1,
+``docs/PHYSICS.md``).
+
+Randomness is fully counter-based: every uniform is a threefry hash of the
+site's *global* linear index (:func:`repro.cluster.bonds.counter_bits`), so
+any spatial decomposition draws bit-identical uniforms — the property the
+Ising planes pin and the mesh paths rely on.
+
+Acceptance mirrors ``core/update_rules.py``'s integer-threshold scheme:
+
+* **Metropolis**: propose a uniformly random *other* colour
+  (``(sigma + 1 + r) % q`` with ``r`` uniform in {0..q-2} via a fixed-point
+  multiply of the hash's top 24 bits), accept with probability
+  ``min(1, exp(beta * dn))`` where ``dn = n_new - n_cur`` in {-4..4} is the
+  agreement-count change (Potts energy change is ``-dn``). The 9-entry
+  acceptance table is compared as ``u24 < ceil(p * 2^24)`` — bitwise the
+  f32 float compare, because each p is an f32 dyadic rational and the
+  2^24 scaling and ceil are exact in f32. :func:`metropolis_thresholds_u24`
+  (host ints, static beta) and :func:`metropolis_thresholds_traced`
+  (vmapped multi-beta ensembles) agree bit-for-bit.
+
+* **Heat-bath**: draw the new colour from the exact conditional
+  ``P(s) = exp(beta * n_s) / sum_t exp(beta * n_t)`` independent of the
+  current colour — a q-way categorical realized as *cumulative* u24
+  integer thresholds ``t_s = ceil(cdf_s * 2^24)``: the new colour is the
+  number of thresholds at or below the hashed u24 uniform. Per-site
+  thresholds are built in-trace from the 5-entry ``exp(beta * k)`` table
+  (k = agreement count in 0..4); the same f32-exactness argument makes the
+  integer compare bitwise equal to the float cdf compare.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import bonds as B
+from repro.core import update_rules
+from repro.potts import state as PS
+
+_U24 = 1 << 24
+RULES = ("metropolis", "heat_bath")
+
+
+def parity_mask(height: int, width: int, color: int,
+                row_offset=0, col_offset=0) -> jax.Array:
+    """Bool [height, width] mask of sites with global parity ``color``."""
+    rows = row_offset + jnp.arange(height, dtype=jnp.int32)
+    cols = col_offset + jnp.arange(width, dtype=jnp.int32)
+    return (rows[:, None] + cols[None, :]) % 2 == color
+
+
+def _u24(bits: jax.Array) -> jax.Array:
+    return bits >> 8
+
+
+def uniform_other(bits: jax.Array, sigma: jax.Array, q: int) -> jax.Array:
+    """A colour != sigma, uniform over the q-1 others: fixed-point multiply
+    ``(u24 * (q-1)) >> 24`` gives r in {0..q-2} (bias < (q-1)/2^24;
+    q <= 256 so the product fits in 32 bits — EngineConfig enforces)."""
+    r = ((_u24(bits) * jnp.uint32(q - 1)) >> 24).astype(jnp.int32)
+    return (sigma + 1 + r) % q
+
+
+# ---------------------------------------------------------------------------
+# Metropolis
+# ---------------------------------------------------------------------------
+
+
+def metropolis_thresholds_u24(beta) -> list[int]:
+    """ceil(min(1, exp(beta*dn)) * 2^24) for dn = -4..4 — host ints from
+    the f32 probabilities (same Fraction-based ceil as the Ising LUTs).
+    The probabilities are computed with the SAME jnp f32 ops as
+    :func:`metropolis_thresholds_traced` so the two agree bit-for-bit."""
+    d = jnp.arange(-4.0, 5.0, dtype=jnp.float32)
+    p = jnp.minimum(jnp.exp(jnp.float32(beta) * d), 1.0)
+    return update_rules._thresholds_u24([float(x) for x in p])
+
+
+def metropolis_thresholds_traced(beta: jax.Array) -> jax.Array:
+    """Traced-beta twin of :func:`metropolis_thresholds_u24` ([9] uint32);
+    exact for every f32 beta (power-of-two scaling + ceil are f32-exact)."""
+    d = jnp.arange(-4.0, 5.0, dtype=jnp.float32)
+    p = jnp.minimum(jnp.exp(jnp.asarray(beta, jnp.float32) * d), 1.0)
+    t = jnp.ceil(p * jnp.float32(_U24)).astype(jnp.uint32)
+    return jnp.minimum(t, jnp.uint32(_U24))
+
+
+def metropolis_color(full: jax.Array, key: jax.Array, thresholds,
+                     q: int, color: int, gi: jax.Array = None) -> jax.Array:
+    """One Metropolis half-update of parity class ``color``.
+
+    ``thresholds`` is the [9] u24 acceptance table (ints or traced uint32).
+    """
+    h, w = full.shape
+    if gi is None:
+        gi = B.global_index(h, w)
+    cand_bits = B.counter_bits(jax.random.fold_in(key, 0), gi)
+    acc_bits = B.counter_bits(jax.random.fold_in(key, 1), gi)
+    cand = uniform_other(cand_bits, full, q)
+    nbs = PS.neighbor_states(full)
+    dn = (PS.agreement_count(full, cand, nbs)
+          - PS.agreement_count(full, full, nbs))        # in {-4..4}
+    t = jnp.take(jnp.asarray(thresholds, jnp.uint32), dn + 4)
+    accept = _u24(acc_bits) < t
+    mask = parity_mask(h, w, color)
+    return jnp.where(mask & accept, cand, full)
+
+
+# ---------------------------------------------------------------------------
+# Heat-bath
+# ---------------------------------------------------------------------------
+
+
+def heat_bath_weight_table(beta) -> jax.Array:
+    """[5] f32 table exp(beta * k), k = 0..4 (agreement-count weights)."""
+    return jnp.exp(jnp.asarray(beta, jnp.float32)
+                   * jnp.arange(5, dtype=jnp.float32))
+
+
+def heat_bath_color(full: jax.Array, key: jax.Array, beta, q: int,
+                    color: int, gi: jax.Array = None) -> jax.Array:
+    """One heat-bath half-update: resample parity class ``color`` from the
+    exact conditional via cumulative u24 thresholds (module docstring)."""
+    h, w = full.shape
+    if gi is None:
+        gi = B.global_index(h, w)
+    u = _u24(B.counter_bits(key, gi))
+    table = heat_bath_weight_table(beta)
+    nbs = PS.neighbor_states(full)
+    weights = [jnp.take(table, PS.agreement_count(full, s, nbs))
+               for s in range(q)]
+    cum = []
+    run = jnp.zeros(full.shape, jnp.float32)
+    for wgt in weights:
+        run = run + wgt
+        cum.append(run)
+    total = cum[-1]
+    new = jnp.zeros(full.shape, jnp.int32)
+    for s in range(q - 1):                   # cdf_{q-1} = 1 by construction
+        t = jnp.ceil((cum[s] / total) * jnp.float32(_U24)).astype(jnp.uint32)
+        new = new + (u >= jnp.minimum(t, jnp.uint32(_U24))).astype(jnp.int32)
+    mask = parity_mask(h, w, color)
+    return jnp.where(mask, new, full)
+
+
+# ---------------------------------------------------------------------------
+# Full sweeps
+# ---------------------------------------------------------------------------
+
+
+def checkerboard_sweep(full: jax.Array, key: jax.Array, beta, q: int,
+                       rule: str = "heat_bath") -> jax.Array:
+    """One full sweep (both parity classes) under the per-sweep ``key``.
+
+    ``beta`` may be a Python float or a traced scalar (multi-beta vmap);
+    Metropolis thresholds are rebuilt per call either way — XLA constant-
+    folds the static case to the host-integer table.
+    """
+    if rule not in RULES:
+        raise ValueError(f"unknown potts rule {rule!r}; use one of {RULES}")
+    thresholds = (metropolis_thresholds_traced(beta)
+                  if rule == "metropolis" else None)
+    for color in (0, 1):
+        kc = jax.random.fold_in(key, color)
+        if rule == "heat_bath":
+            full = heat_bath_color(full, kc, beta, q, color)
+        else:
+            full = metropolis_color(full, kc, thresholds, q, color)
+    return full
+
+
+def checkerboard_sweep_measured(full: jax.Array, key: jax.Array, beta,
+                                q: int, rule: str = "heat_bath") -> tuple:
+    """Measured twin: ``(new_full, (order_parameter, E/spin))``."""
+    new = checkerboard_sweep(full, key, beta, q, rule)
+    return new, PS.full_stats(new, q)

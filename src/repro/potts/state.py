@@ -1,0 +1,117 @@
+"""q-state Potts lattice state: integer-coded spins and observables.
+
+The q-state Potts model generalizes Ising: every site holds a "colour"
+``sigma_i`` in ``{0..q-1}`` and the Hamiltonian rewards *agreement*,
+
+    H = -J sum_<ij> delta(sigma_i, sigma_j)          (J = 1)
+
+(q = 2 IS the Ising model under ``sigma_potts = (1 - sigma_ising)/2`` with
+``beta_potts = 2 * beta_ising`` — the delta couples half as strongly as the
+product, see ``docs/PHYSICS.md``; pinned in ``tests/test_potts.py``).
+
+Spins are stored as int32 full views ``[H, W]`` (torus). Neighbour
+*agreement counts* replace the Ising neighbour sums and come from the same
+4-roll primitive (``jnp.roll`` in each direction + equality compare); all
+per-site counts are small integers, so every streamed sum below is
+integer-exact in f32 up to 2^24 sites — reduction-order independent and
+bitwise-reproducible across decompositions, exactly like the Ising
+measurement plane (``core/measure.py``).
+
+The scalar order parameter is the standard Potts magnetization
+
+    m = (q * max_s rho_s - 1) / (q - 1),   rho_s = fraction in state s,
+
+which is 0 for a uniform colour distribution and 1 for a monochrome
+lattice; at q = 2 it reduces to the Ising |m|.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+DTYPE = jnp.int32
+
+
+def beta_c(q: int) -> float:
+    """Exact self-duality point of the 2-D q-state Potts model:
+    beta_c(q) = ln(1 + sqrt(q)). Second-order transition for q <= 4,
+    first-order for q >= 5 (q = 2 gives 2 * beta_c of Ising)."""
+    return math.log(1.0 + math.sqrt(float(q)))
+
+
+def random_state(key: jax.Array, height: int, width: int, q: int,
+                 dtype=DTYPE) -> jax.Array:
+    """Uniform random colours in {0..q-1}, shape [height, width] (hot)."""
+    return jax.random.randint(key, (height, width), 0, q, dtype)
+
+
+def cold_state(height: int, width: int, dtype=DTYPE) -> jax.Array:
+    """Monochrome colour-0 configuration (a ground state)."""
+    return jnp.zeros((height, width), dtype)
+
+
+def neighbor_states(full: jax.Array) -> tuple:
+    """(east, west, south, north) neighbour colours — the 4-roll primitive."""
+    return (jnp.roll(full, -1, 1), jnp.roll(full, 1, 1),
+            jnp.roll(full, -1, 0), jnp.roll(full, 1, 0))
+
+
+def agreement_count(full: jax.Array, state, neighbors=None) -> jax.Array:
+    """Per-site count of the 4 neighbours equal to ``state`` (int32 in 0..4).
+
+    ``state`` may be a scalar (counts for one candidate colour) or an array
+    like ``full`` (counts for each site's own / proposed colour).
+    """
+    if neighbors is None:
+        neighbors = neighbor_states(full)
+    n = jnp.zeros(full.shape, jnp.int32)
+    for nb in neighbors:
+        n = n + (nb == state).astype(jnp.int32)
+    return n
+
+
+def state_counts(full: jax.Array, q: int, axis_names=()) -> jax.Array:
+    """[q] f32 colour populations (exact integers; psum-reduced on a mesh)."""
+    counts = jnp.stack([
+        jnp.sum((full == s).astype(jnp.float32)) for s in range(q)])
+    if axis_names:
+        counts = jax.lax.psum(counts, axis_names)
+    return counts
+
+
+def order_parameter_from_counts(counts: jax.Array, q: int,
+                                n_spins) -> jax.Array:
+    """m = (q * max_s rho_s - 1) / (q - 1) from colour populations."""
+    rho_max = jnp.max(counts) / jnp.float32(n_spins)
+    return (q * rho_max - 1.0) / jnp.float32(q - 1)
+
+
+def order_parameter(full: jax.Array, q: int) -> jax.Array:
+    return order_parameter_from_counts(state_counts(full, q), q, full.size)
+
+
+def energy_per_spin(full: jax.Array) -> jax.Array:
+    """E/N = -(1/N) sum_<ij> delta(sigma_i, sigma_j), each bond counted once
+    (east + south rolls). Integer-exact f32 sum."""
+    agree = ((full == jnp.roll(full, -1, 1)).astype(jnp.float32)
+             + (full == jnp.roll(full, -1, 0)).astype(jnp.float32))
+    return -jnp.sum(agree) / jnp.float32(full.size)
+
+
+def full_stats(full: jax.Array, q: int) -> tuple:
+    """(order parameter, E/spin) of a single-device full view — the Potts
+    analogue of ``cluster.sweep.full_stats``."""
+    return order_parameter(full, q), energy_per_spin(full)
+
+
+def ising_to_potts(full_ising: jax.Array) -> jax.Array:
+    """Map an Ising {-1,+1} lattice onto q=2 Potts colours {0,1}
+    (+1 -> 0, -1 -> 1; the labels are arbitrary, the physics is not)."""
+    return ((1 - full_ising.astype(jnp.int32)) // 2).astype(DTYPE)
+
+
+def potts_to_ising(full_potts: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`ising_to_potts` (q = 2 only)."""
+    return (1 - 2 * full_potts).astype(dtype)

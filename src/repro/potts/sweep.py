@@ -1,0 +1,77 @@
+"""Single-device Swendsen-Wang / Wolff sweeps for the q-state Potts model.
+
+Identical pipeline to :mod:`repro.cluster.sweep`, with two Potts-specific
+stages: FK bonds activate on *equal colours* with p = 1 - exp(-beta)
+(:mod:`repro.potts.bonds`), and the per-cluster decision assigns a fresh
+colour instead of a sign flip:
+
+* Swendsen-Wang: every cluster draws an independent uniform colour in
+  {0..q-1} — gather-free, hashed from the shared cluster label
+  (``cluster_states(counter_bits(key, label), q)``).
+* Wolff: one uniformly-random seed site; its whole cluster moves to a
+  uniformly-random *different* colour ``(sigma + 1 + r) % q`` (the
+  restricted FK growth is exactly the Wolff law, and a cluster is
+  monochrome so the per-site formula is constant across it — which is what
+  lets the mesh path apply it without gathering the cluster colour).
+
+RNG layout per sweep key k: ``fold_in(k, 0)`` bonds, ``fold_in(k, 1)``
+cluster-colour hash, ``fold_in(k, 2)`` Wolff seed site, ``fold_in(k, 3)``
+Wolff target colour — all counters, so the sharded path
+(:mod:`repro.potts.mesh`) reproduces every sweep bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import label as LBL
+from repro.potts import bonds as PB
+from repro.potts import state as PS
+
+_K_BONDS, _K_COINS, _K_SEED, _K_TARGET = 0, 1, 2, 3
+
+ALGORITHMS = ("swendsen_wang", "wolff")
+
+
+def labels_for(full: jax.Array, key: jax.Array, threshold) -> jax.Array:
+    """Cluster labels one sweep would use (bond + label stages only);
+    ``threshold`` from ``potts.bonds.bond_threshold_u24(beta)``."""
+    kb = jax.random.fold_in(key, _K_BONDS)
+    br, bd = PB.fk_bonds(full, kb, threshold)
+    return LBL.label_components(br, bd)
+
+
+def wolff_target_shift(key: jax.Array, q: int) -> jax.Array:
+    """r in {1..q-1}: the colour shift applied to the Wolff cluster."""
+    kt = jax.random.fold_in(key, _K_TARGET)
+    return jax.random.randint(kt, (), 1, q)
+
+
+def _cluster_assignment(full, lab, key, q: int, algorithm: str):
+    """New colour per site from the per-cluster draw (or Wolff seed)."""
+    if algorithm == "swendsen_wang":
+        kf = jax.random.fold_in(key, _K_COINS)
+        return PB.cluster_states(PB.counter_bits(kf, lab), q)
+    if algorithm == "wolff":
+        ks = jax.random.fold_in(key, _K_SEED)
+        seed = jax.random.randint(ks, (), 0, full.size)
+        shift = wolff_target_shift(key, q)
+        moved = (full + shift) % q
+        return jnp.where(lab == lab.reshape(-1)[seed], moved, full)
+    raise ValueError(f"unknown cluster algorithm {algorithm!r}; "
+                     f"use one of {ALGORITHMS}")
+
+
+def cluster_sweep(full: jax.Array, key: jax.Array, threshold, q: int,
+                  algorithm: str = "swendsen_wang") -> jax.Array:
+    """One SW/Wolff update of the full [L, L] colour lattice."""
+    lab = labels_for(full, key, threshold)
+    return _cluster_assignment(full, lab, key, q, algorithm)
+
+
+def cluster_sweep_measured(full: jax.Array, key: jax.Array, threshold,
+                           q: int,
+                           algorithm: str = "swendsen_wang") -> tuple:
+    """Measured twin: ``(new_full, (order_parameter, E/spin))``."""
+    new = cluster_sweep(full, key, threshold, q, algorithm)
+    return new, PS.full_stats(new, q)

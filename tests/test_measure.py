@@ -97,6 +97,49 @@ def test_moments_accumulate_and_thin():
     np.testing.assert_allclose(out["m4"], (kept_m ** 4).mean(), rtol=1e-6)
 
 
+def test_moments_stream_e2_for_specific_heat():
+    """The streamed E^2 moment reproduces the series-based specific heat
+    (and susceptibility) without a per-sweep trace — the observable the
+    mesh/opt/kernel fori_loop paths could never report before."""
+    rng = np.random.default_rng(1)
+    ms = rng.uniform(-1, 1, 64).astype(np.float32)
+    es = rng.uniform(-2, 0, 64).astype(np.float32)
+    mom = measure.init_moments()
+    for step in range(64):
+        mom = measure.accumulate(mom, jnp.float32(ms[step]),
+                                 jnp.float32(es[step]))
+    out = measure.finalize(mom)
+    e = np.asarray(es, np.float64)
+    np.testing.assert_allclose(out["E2"], (e ** 2).mean(), rtol=1e-6)
+    beta, n_spins = 0.44, 4096
+    c_stream = obs.specific_heat_from_moments(out, beta, n_spins)
+    c_series = obs.specific_heat(es, beta, n_spins)
+    np.testing.assert_allclose(c_stream, c_series, rtol=1e-3)
+    chi_stream = obs.susceptibility_from_moments(out, beta, n_spins)
+    chi_series = obs.susceptibility(ms, beta, n_spins)
+    np.testing.assert_allclose(chi_stream, chi_series, rtol=1e-3)
+
+
+def test_engine_mesh_moments_include_e2(subproc):
+    """The fori_loop mesh path streams E^2 so engine users get specific
+    heat from moments alone (no series exists on that path)."""
+    out = subproc("""
+    from repro.api import EngineConfig, IsingEngine
+    from repro.core import observables as obs
+    eng = IsingEngine(EngineConfig(size=32, beta=0.3, n_sweeps=10,
+                                   topology="mesh", mesh_shape=(2, 2),
+                                   mesh_axes=("data", "model"),
+                                   block_size=8))
+    res = eng.simulate(seed=0)
+    mom = res.moments
+    assert mom["E2"] >= mom["E"] ** 2 - 1e-9
+    c = obs.specific_heat_from_moments(mom, 0.3, 32 * 32)
+    assert c >= -1e-6, c
+    print("MESH_E2_OK", c)
+    """, devices=4)
+    assert "MESH_E2_OK" in out
+
+
 @pytest.mark.parametrize("burnin,every", [(0, 3), (1, 2), (4, 3)])
 def test_moments_from_series_matches_loop_accumulation(burnin, every):
     """The fori_loop accumulator and the series fold must select the SAME
@@ -114,7 +157,7 @@ def test_moments_from_series_matches_loop_accumulation(burnin, every):
     b = measure.finalize(measure.moments_from_series(
         ms, es, burnin=burnin, measure_every=every))
     assert a["n_samples"] == b["n_samples"]
-    for k in ("m_abs", "E", "m2", "m4", "U4"):
+    for k in ("m_abs", "E", "m2", "m4", "U4", "E2"):
         np.testing.assert_allclose(a[k], b[k], rtol=1e-6), k
 
 
