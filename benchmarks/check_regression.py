@@ -1,0 +1,101 @@
+"""Perf-trajectory gate: diff fresh BENCH_*.json rows against baselines.
+
+The committed ``BENCH_<section>.json`` files at the repo root are the
+smoke-sized rows from the PR that introduced (or last intentionally moved)
+each section. CI re-runs the smoke benchmarks into a scratch directory and
+calls this checker, which fails when any matched row got more than
+``--factor`` (default 2x) slower than its baseline.
+
+CI-noise tolerance: rows whose fresh time is below ``--floor-us`` (default
+2000 us) are never flagged — sub-millisecond smoke rows are dominated by
+scheduler jitter on shared runners, and a 2x swing there is weather, not a
+regression. Rows present on only one side are reported but never fail the
+gate (sections grow rows as PRs land; renaming one should not break CI for
+the next contributor).
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --json --json-dir fresh
+    python -m benchmarks.check_regression --baseline-dir . --fresh-dir fresh
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_rows(path: Path) -> dict:
+    """{row name: us_per_call} of one BENCH_<section>.json file."""
+    data = json.loads(path.read_text())
+    return {r["name"]: float(r["us_per_call"]) for r in data.get("rows", [])
+            if "name" in r and "us_per_call" in r}
+
+
+def compare_section(baseline: dict, fresh: dict, factor: float,
+                    floor_us: float) -> tuple:
+    """(regressions, notes): regressions are (name, base_us, fresh_us)
+    triples that violate the gate; notes are informational strings."""
+    regressions, notes = [], []
+    for name, base_us in sorted(baseline.items()):
+        if name not in fresh:
+            notes.append(f"  ~ {name}: in baseline only (row removed?)")
+            continue
+        fresh_us = fresh[name]
+        if fresh_us > factor * base_us and fresh_us > floor_us:
+            regressions.append((name, base_us, fresh_us))
+    for name in sorted(set(fresh) - set(baseline)):
+        notes.append(f"  + {name}: new row ({fresh[name]:.1f} us), "
+                     "no baseline yet")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding freshly produced BENCH_*.json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when fresh > factor * baseline (default 2)")
+    ap.add_argument("--floor-us", type=float, default=2000.0,
+                    help="never flag rows faster than this (CI noise "
+                         "floor, default 2000 us)")
+    ap.add_argument("--sections", nargs="*", default=[],
+                    help="restrict to these sections (default: every "
+                         "baseline that has a fresh counterpart)")
+    args = ap.parse_args(argv)
+
+    base_dir, fresh_dir = Path(args.baseline_dir), Path(args.fresh_dir)
+    baselines = {p.stem[len("BENCH_"):]: p
+                 for p in sorted(base_dir.glob("BENCH_*.json"))}
+    if args.sections:
+        baselines = {s: p for s, p in baselines.items()
+                     if s in set(args.sections)}
+    if not baselines:
+        print(f"no BENCH_*.json baselines under {base_dir}")
+        return 1
+
+    failed = False
+    for section, base_path in baselines.items():
+        fresh_path = fresh_dir / base_path.name
+        if not fresh_path.exists():
+            print(f"[{section}] no fresh rows ({fresh_path} missing) — "
+                  "skipped")
+            continue
+        regressions, notes = compare_section(
+            load_rows(base_path), load_rows(fresh_path),
+            args.factor, args.floor_us)
+        status = "FAIL" if regressions else "ok"
+        print(f"[{section}] {status}")
+        for name, base_us, fresh_us in regressions:
+            print(f"  ! {name}: {base_us:.1f} us -> {fresh_us:.1f} us "
+                  f"({fresh_us / base_us:.2f}x, gate {args.factor}x "
+                  f"above floor {args.floor_us:.0f} us)")
+            failed = True
+        for note in notes:
+            print(note)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,103 @@
+"""3-D domain decomposition: sharded cube Msites/s vs single device.
+
+The paper's any-dimension remark at scale: this section times
+``run_sweeps3d`` on one device against the same cube sharded over a
+2x2 device grid (``repro.distributed.ising3d``), reporting Msites/s per
+sweep for each, plus a correctness gate — the sharded chain must be
+BITWISE identical to the single-device chain (the counter-based-RNG
+contract the plane is built on).
+
+The sharded timing runs in a subprocess (virtual devices must be
+configured before jax initializes; the bench driver process is already
+single-device), which re-emits its rows through this process's sink.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+from benchmarks.common import emit
+
+_SUBPROC = """
+import time
+import jax, jax.numpy as jnp
+from repro.core import ising3d as I3
+from repro.distributed import ising3d as d3
+from repro.launch import mesh as mesh_lib
+
+side, n_sweeps, beta = {side}, {n_sweeps}, {beta}
+key = jax.random.PRNGKey(0)
+full = I3.random_lattice3d(jax.random.PRNGKey(1), side, side, side)
+
+mesh = mesh_lib.make_mesh((2, 2), ("data", "model"))
+cfg = d3.Dist3DConfig(beta=beta, row_axes=("data",), col_axes=("model",))
+run = d3.make_run_sweeps_fn(mesh, cfg, n_sweeps)
+sh = d3.lattice_sharding(mesh, cfg)
+
+out = jax.block_until_ready(run(jax.device_put(full, sh), key))  # compile
+t0 = time.perf_counter()
+out = jax.block_until_ready(run(jax.device_put(full, sh), key))
+secs = time.perf_counter() - t0
+
+want, _ = I3.run_sweeps3d(full, key, n_sweeps, beta)
+bitwise = bool((jax.device_get(out) == jax.device_get(want)).all())
+msites = side ** 3 * n_sweeps / secs / 1e6
+print(f"ROW,mesh3d_sharded_2x2_{{side}},{{secs / n_sweeps:.9f}},"
+      f"Msites_per_s={{msites:.2f}} bitwise_eq_single={{bitwise}}")
+assert bitwise, "sharded 3-D chain diverged from single device"
+"""
+
+
+def run(side=32, n_sweeps=20, smoke=False, seed=0):
+    import jax
+    from repro.core import ising3d as I3
+
+    if smoke:
+        side, n_sweeps = 8, 5
+    beta = I3.BETA_C_3D
+    print(f"# mesh3d: side={side} sweeps={n_sweeps} beta={beta:.6f} "
+          f"smoke={smoke}")
+
+    # -- single device -----------------------------------------------------
+    key = jax.random.PRNGKey(seed)
+    full = I3.random_lattice3d(jax.random.PRNGKey(seed + 1),
+                               side, side, side)
+    runner = jax.jit(lambda f, k: I3.run_sweeps3d(f, k, n_sweeps, beta)[0])
+    jax.block_until_ready(runner(full, key))    # compile warmup
+    t0 = time.perf_counter()
+    jax.block_until_ready(runner(full, key))
+    secs = time.perf_counter() - t0
+    emit(f"mesh3d_single_{side}", secs / n_sweeps,
+         f"Msites_per_s={side ** 3 * n_sweeps / secs / 1e6:.2f}")
+
+    # -- sharded 2x2 (subprocess: device count is locked at jax init) ------
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(repo / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    code = textwrap.dedent(_SUBPROC.format(side=side, n_sweeps=n_sweeps,
+                                           beta=beta))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        print(proc.stdout)
+        print(proc.stderr, file=sys.stderr)
+        raise RuntimeError("mesh3d sharded subprocess failed")
+    for line in proc.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, secs_per_sweep, derived = line.split(",", 3)
+            emit(name, float(secs_per_sweep), derived)
+    return 0
+
+
+def main(smoke=False) -> int:
+    return run(smoke=smoke)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main("--smoke" in sys.argv[1:]))

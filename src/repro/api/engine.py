@@ -11,9 +11,14 @@ backend         ``xla`` (Algorithm 2 in pure jnp, the paper-faithful
                 path), ``pallas`` / ``pallas_lines`` / ``ref`` (the
                 fused kernel stack in :mod:`repro.kernels`)
 topology        ``single`` (one device) or ``mesh`` (spatial domain
-                decomposition + halo exchange via
-                :mod:`repro.distributed.ising`)
-dims            2 (checkerboard quads) or 3 (:mod:`repro.core.ising3d`)
+                decomposition + halo exchange through the generic
+                N-D halo plane: :mod:`repro.distributed.halo` /
+                :mod:`repro.distributed.decomp`, with per-model bindings
+                in ``distributed.ising``, ``distributed.ising3d``,
+                ``cluster.mesh``, and ``potts.mesh``)
+dims            2 (checkerboard quads) or 3 (:mod:`repro.core.ising3d`;
+                ``topology="mesh"`` shards the [D, H, W] cube over a
+                2- or 3-axis device grid, bitwise-equal to one device)
 pipeline        ``paper`` (f32 uniforms + float acceptance) or ``opt``
                 (integer-threshold acceptance, rbg-capable RNG — the
                 beyond-paper fast path in ``distributed.ising``)
@@ -36,8 +41,9 @@ model (:mod:`repro.potts`) runs through the same front door —
 ``EngineConfig(model="potts", q=3, algorithm="swendsen_wang")`` — with
 integer-coded colour lattices, checkerboard heat-bath/Metropolis
 (``rule=``), FK-bond Swendsen-Wang/Wolff (``algorithm=``), single or mesh
-topology (sharded label merge bitwise equal to one device), and vmapped
-multi-beta ensembles. For Potts runs, ``EngineResult.magnetization``
+topology for BOTH dynamics families (the sharded cluster label merge and
+the sharded int32-colour checkerboard are each bitwise equal to one
+device), and vmapped multi-beta ensembles. For Potts runs, ``EngineResult.magnetization``
 carries the scalar order parameter (q max_s rho_s - 1)/(q - 1) per sweep
 and ``beta`` is the Potts coupling (q = 2 maps to Ising at
 ``beta_ising = beta_potts / 2``),
@@ -184,10 +190,6 @@ class EngineConfig:
             if self.field:
                 err("model='potts' samples the h=0 Hamiltonian; "
                     "field must be 0")
-            if self.topology == "mesh" and self.algorithm == "metropolis":
-                err("the sharded Potts path is the cluster plane; use "
-                    "algorithm='swendsen_wang'/'wolff' on a mesh or "
-                    "topology='single' for checkerboard dynamics")
             if self.topology == "mesh" and self.betas:
                 err("potts ensembles are single-device (vmapped); "
                     "use topology='single' for multi-beta potts runs")
@@ -247,15 +249,16 @@ class EngineConfig:
             if self.backend != "xla":
                 err("3-D supports only backend='xla' (the kernel stack is "
                     "2-D); got " + repr(self.backend))
-            if self.topology != "single":
-                err("3-D domain decomposition is not implemented; use "
-                    "topology='single'")
             if self.pipeline != "paper" or self.ensemble != "independent":
                 err("3-D supports pipeline='paper', ensemble='independent'")
             if self.field:
                 err("3-D external field is not implemented")
             if self.width:
                 err("3-D lattices are cubic; width applies to 2-D only")
+            if self.betas:
+                err("3-D ensembles are not implemented (the vmapped "
+                    "replica runner sweeps 2-D compact quads); use a "
+                    "scalar beta")
         else:
             w = self.resolved_width()
             if self.size % 2 or w % 2:
@@ -403,6 +406,28 @@ class IsingEngine:
                         f"over replica_axes {cfg.replica_axes} "
                         f"(size {n_shards}); pad the betas ladder or "
                         "change replica_axes")
+            elif cfg.dims == 3:
+                from repro.distributed import halo
+                d3cfg = self._dist3d_cfg()
+                for name, axes in (("depth", d3cfg.depth_axes),
+                                   ("row", d3cfg.row_axes),
+                                   ("col", d3cfg.col_axes)):
+                    n = halo.axis_size(self.mesh, axes)
+                    if cfg.size % n:
+                        _config_error(
+                            f"3-D cube side {cfg.size} does not divide the "
+                            f"{name} shard count {n} (mesh_axes "
+                            f"{cfg.mesh_axes}); adjust size or mesh_shape")
+            elif self._scenario() == "potts_cb_mesh":
+                from repro.distributed import halo
+                dcfg = self._dist_cfg()
+                nrows = halo.axis_size(self.mesh, dcfg.row_axes)
+                ncols = halo.axis_size(self.mesh, dcfg.col_axes)
+                if cfg.size % nrows or cfg.resolved_width() % ncols:
+                    _config_error(
+                        f"colour lattice {cfg.size}x{cfg.resolved_width()} "
+                        f"does not tile the {nrows}x{ncols} device grid; "
+                        "adjust size/width or mesh_shape")
             else:
                 from repro.distributed import halo
                 dcfg = self._dist_cfg()
@@ -430,9 +455,10 @@ class IsingEngine:
             if c.algorithm != "metropolis":
                 return ("potts_cluster_mesh" if c.topology == "mesh"
                         else "potts_cluster")
-            return "potts_cb"
+            return ("potts_cb_mesh" if c.topology == "mesh"
+                    else "potts_cb")
         if c.dims == 3:
-            return "3d"
+            return "mesh3d" if c.topology == "mesh" else "3d"
         if c.algorithm != "metropolis":
             return ("cluster_mesh" if c.topology == "mesh" else "cluster")
         if c.ensemble == "tempering":
@@ -463,10 +489,43 @@ class IsingEngine:
                      else "xla"),
             prob_dtype=c.prob_dtype, pipeline=c.pipeline, rule=c.rule)
 
+    def _dist3d_cfg(self):
+        """3-D decomposition geometry: the mesh axes map onto the cube's
+        (D, H, W) right-aligned — a 2-axis mesh shards (H, W) and leaves
+        depth whole, a 3-axis mesh (e.g. (pod, data, model)) shards all
+        three, so adding pods extends the simulated volume."""
+        from repro.distributed import ising3d as d3
+        c = self.cfg
+        m = c.mesh_axes
+        return d3.Dist3DConfig(
+            beta=c.beta,
+            depth_axes=tuple(m[:-2]),
+            row_axes=(m[-2],), col_axes=(m[-1],))
+
     def lattice_sharding(self):
         """NamedSharding of the blocked mesh state [4, MR, MC, bs, bs]."""
         from repro.distributed import ising as dising
         return dising.lattice_sharding(self.mesh, self._dist_cfg())
+
+    def state_sharding(self):
+        """NamedSharding of this scenario's sharded state layout (None for
+        single-device scenarios) — what checkpoint restore re-shards with."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        c = self.cfg
+        scen = self._scenario()
+        if scen == "mesh3d":
+            from repro.distributed import ising3d as d3
+            return d3.lattice_sharding(self.mesh, self._dist3d_cfg())
+        if scen == "potts_cb_mesh":
+            dcfg = self._dist_cfg()
+            return NamedSharding(self.mesh,
+                                 P(dcfg.row_axes, dcfg.col_axes))
+        if scen in ("mesh", "opt", "cluster_mesh", "potts_cluster_mesh"):
+            return self.lattice_sharding()
+        if c.betas and self.mesh is not None and c.topology == "mesh":
+            return NamedSharding(self.mesh,
+                                 P(c.replica_axes, None, None, None))
+        return None
 
     def _chain_cfg(self, beta=None) -> sampler.ChainConfig:
         c = self.cfg
@@ -505,11 +564,14 @@ class IsingEngine:
         scen = self._scenario()
         if scen.startswith("potts"):
             return self._init_potts(key)
-        if scen == "3d":
+        if scen in ("3d", "mesh3d"):
             n = c.size
-            if self._auto_hot(c.beta):
-                return I3.random_lattice3d(key, n, n, n, dt)
-            return I3.cold_lattice3d(n, n, n, dt)
+            full = (I3.random_lattice3d(key, n, n, n, dt)
+                    if self._auto_hot(c.beta)
+                    else I3.cold_lattice3d(n, n, n, dt))
+            if scen == "mesh3d":
+                full = jax.device_put(full, self.state_sharding())
+            return full
         if scen in ("ensemble", "tempering") or (scen == "cluster"
                                                  and c.betas):
             states = [
@@ -552,6 +614,8 @@ class IsingEngine:
                               for i, b in enumerate(c.betas)])
         full = one(key, c.beta)
         if c.topology == "mesh":
+            if c.algorithm == "metropolis":   # checkerboard: full view
+                return jax.device_put(full, self.state_sharding())
             quads = L.to_quads(full)
             bs = c.resolved_block_size()
             qb = jnp.stack([L.block(quads[i], bs) for i in range(4)])
@@ -842,6 +906,29 @@ class IsingEngine:
                 self.cfg.algorithm, n_sweeps, *args)
         return self._runner_cache[key_]
 
+    def _potts_cb_mesh_runner(self, n_sweeps: int, measured: bool = False):
+        from repro.potts import mesh as potts_mesh
+        key_ = ("potts_cb_mesh", n_sweeps, measured)
+        if key_ not in self._runner_cache:
+            make = (potts_mesh.make_potts_cb_run_fn if measured
+                    else potts_mesh.make_potts_cb_sweeps_fn)
+            args = ((self.cfg.measure_every,) if measured else ())
+            self._runner_cache[key_] = make(
+                self.mesh, self._dist_cfg(), self.cfg.resolved_q(),
+                self.cfg.rule, n_sweeps, *args)
+        return self._runner_cache[key_]
+
+    def _mesh3d_runner(self, n_sweeps: int, measured: bool = False):
+        from repro.distributed import ising3d as d3
+        key_ = ("mesh3d", n_sweeps, measured)
+        if key_ not in self._runner_cache:
+            make = (d3.make_run_chain_fn if measured
+                    else d3.make_run_sweeps_fn)
+            args = ((self.cfg.measure_every,) if measured else ())
+            self._runner_cache[key_] = make(self.mesh, self._dist3d_cfg(),
+                                            n_sweeps, *args)
+        return self._runner_cache[key_]
+
     def _mesh_runner(self, n_sweeps: int, measured: bool = False):
         from repro.distributed import ising as dising
         key_ = ("mesh", n_sweeps, measured)
@@ -897,16 +984,9 @@ class IsingEngine:
                                     self._series_moments(ms, es))
             return EngineResult(sampler.run_sweeps(state, key,
                                                    self._chain_cfg()))
-        if scen == "mesh":
-            if c.measure:
-                final, mom = self._mesh_runner(c.n_sweeps, measured=True)(
-                    state, key)
-                return EngineResult(final, moments=measure.finalize(mom))
-            return EngineResult(self._mesh_runner(c.n_sweeps)(state, key))
-        if scen in ("cluster_mesh", "potts_cluster_mesh"):
-            runner = (self._potts_cluster_mesh_runner
-                      if scen == "potts_cluster_mesh"
-                      else self._cluster_mesh_runner)
+        if scen in ("mesh", "mesh3d", "potts_cb_mesh", "cluster_mesh",
+                    "potts_cluster_mesh"):
+            runner = self._mesh_runner_for(scen)
             if c.measure:
                 final, mom = runner(c.n_sweeps, measured=True)(state, key)
                 return EngineResult(final, moments=measure.finalize(mom))
@@ -956,19 +1036,40 @@ class IsingEngine:
         return EngineResult(final, ms.T, None,
                             extra={"swap_fraction": frac, "betas": c.betas})
 
+    def _mesh_runner_for(self, scen: str):
+        return {"mesh": self._mesh_runner,
+                "mesh3d": self._mesh3d_runner,
+                "potts_cb_mesh": self._potts_cb_mesh_runner,
+                "cluster_mesh": self._cluster_mesh_runner,
+                "potts_cluster_mesh": self._potts_cluster_mesh_runner,
+                }[scen]
+
+    _MESH_SCENARIOS = ("mesh", "mesh3d", "potts_cb_mesh", "cluster_mesh",
+                       "potts_cluster_mesh")
+
     def run_sweeps(self, state: jax.Array, key: jax.Array,
                    n_sweeps: int) -> jax.Array:
-        """Measurement-free chunk of the mesh scenarios (checkpoint cadence
-        in ``repro.launch.simulate``); returns only the new state."""
+        """Measurement-free chunk of any scenario (the checkpoint cadence
+        in ``repro.launch.simulate``); returns only the new state.
+
+        Mesh scenarios dispatch straight to their compiled chunk runner;
+        single-device and ensemble scenarios run through a cached
+        measurement-free sub-engine with ``n_sweeps`` overridden — the
+        same compiled programs, so a chunked run is bitwise a straight run
+        (restart safety for every checkpointable scenario).
+        """
         scen = self._scenario()
-        if scen == "cluster_mesh":
-            return self._cluster_mesh_runner(n_sweeps)(state, key)
-        if scen == "potts_cluster_mesh":
-            return self._potts_cluster_mesh_runner(n_sweeps)(state, key)
-        if scen != "mesh":
-            _config_error("run_sweeps(n_sweeps=...) is the chunked mesh "
-                          "runner; use run() elsewhere")
-        return self._mesh_runner(n_sweeps)(state, key)
+        if scen in self._MESH_SCENARIOS:
+            return self._mesh_runner_for(scen)(n_sweeps)(state, key)
+        if scen == "tempering":
+            _config_error("tempering chunks are not supported; use run() "
+                          "(swap decisions need the measured energies)")
+        key_ = ("chunk_engine", n_sweeps)
+        if key_ not in self._runner_cache:
+            self._runner_cache[key_] = IsingEngine(
+                dataclasses.replace(self.cfg, n_sweeps=n_sweeps,
+                                    measure=False), mesh=self.mesh)
+        return self._runner_cache[key_].run(state, key).state
 
     def simulate(self, seed: int = 0) -> EngineResult:
         """One-call convenience: split seed into init/chain keys and run."""
@@ -980,27 +1081,61 @@ class IsingEngine:
         return float(jnp.mean(state.astype(jnp.float32)))
 
     def stats(self, state: jax.Array) -> tuple:
-        """Exact global (m, E/spin) of a mesh/opt blocked state without
+        """Exact global (m, E/spin) of a sharded mesh state without
         gathering it — one jitted shard_map psum over the sharded lattice
         (the streaming plane's standalone entry point; supersedes the old
         magnetization-only logging helper). For Potts meshes ``m`` is the
         order parameter and ``E`` the agreement-bond energy."""
         scen = self._scenario()
-        if scen not in ("mesh", "opt", "cluster_mesh",
-                        "potts_cluster_mesh"):
-            _config_error("stats(state) reads the sharded blocked layout; "
+        if scen not in ("mesh", "opt", "mesh3d", "potts_cb_mesh",
+                        "cluster_mesh", "potts_cluster_mesh"):
+            _config_error("stats(state) reads the sharded mesh layouts; "
                           "use run() results elsewhere")
         if "global_stats" not in self._runner_cache:
             if scen == "potts_cluster_mesh":
                 from repro.potts import mesh as potts_mesh
                 self._runner_cache["global_stats"] = potts_mesh.global_stats(
                     self.mesh, self._dist_cfg(), self.cfg.resolved_q())
+            elif scen == "potts_cb_mesh":
+                from repro.potts import mesh as potts_mesh
+                self._runner_cache["global_stats"] = \
+                    potts_mesh.cb_global_stats(
+                        self.mesh, self._dist_cfg(), self.cfg.resolved_q())
+            elif scen == "mesh3d":
+                from repro.distributed import ising3d as d3
+                self._runner_cache["global_stats"] = d3.global_stats(
+                    self.mesh, self._dist3d_cfg())
             else:
                 from repro.distributed import ising as dising
                 self._runner_cache["global_stats"] = dising.global_stats(
                     self.mesh, self._dist_cfg())
         m, e = self._runner_cache["global_stats"](state)
         return float(m), float(e)
+
+    def state_template(self):
+        """``jax.ShapeDtypeStruct`` of this scenario's state layout — what
+        checkpoint restore needs (shape + dtype, no allocation)."""
+        c = self.cfg
+        scen = self._scenario()
+        dt = jnp.dtype(c.dtype)
+        if scen.startswith("potts"):
+            dt = jnp.int32
+        if scen in ("3d", "mesh3d"):
+            shape = (c.size,) * 3
+        elif scen in ("potts_cb", "potts_cb_mesh", "potts_cluster"):
+            shape = (c.size, c.resolved_width())
+            if c.betas:
+                shape = (c.n_replicas(),) + shape
+        elif scen in ("mesh", "opt", "cluster_mesh", "potts_cluster_mesh"):
+            bs = c.resolved_block_size()
+            shape = (4, c.size // 2 // bs, c.resolved_width() // 2 // bs,
+                     bs, bs)
+        elif c.betas:   # ensemble / tempering / multi-beta cluster: quads
+            shape = (c.n_replicas(), 4, c.size // 2,
+                     c.resolved_width() // 2)
+        else:           # chain / kernel / cluster: compact quads
+            shape = (4, c.size // 2, c.resolved_width() // 2)
+        return jax.ShapeDtypeStruct(shape, dt)
 
     def phase_curve(self, key: jax.Array, burnin: int = 0,
                     full_stats: bool = False) -> list:

@@ -83,7 +83,10 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def restore(ckpt_dir: str, like, step: Optional[int] = None,
             shardings=None):
     """Restore into the structure of ``like``. ``shardings`` (optional
-    matching tree) re-shards each leaf — independent of the saving mesh."""
+    matching tree) re-shards each leaf — independent of the saving mesh.
+    ``like`` leaves may be arrays or ``jax.ShapeDtypeStruct`` templates
+    (e.g. ``IsingEngine.state_template()``) — only the dtype is read, so
+    no template allocation is ever materialized."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -96,7 +99,8 @@ def restore(ckpt_dir: str, like, step: Optional[int] = None,
             key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                            for q in p)
             arr = data[key]
-            want = jnp.asarray(leaf).dtype
+            want = (jnp.dtype(leaf.dtype) if hasattr(leaf, "dtype")
+                    else jnp.asarray(leaf).dtype)
             if arr.dtype != want:           # e.g. bf16 widened to f32 on save
                 arr = arr.astype(want)
             out.append(arr)

@@ -45,6 +45,7 @@ from repro.cluster import bonds as B
 from repro.cluster import label as LBL
 from repro.core import lattice as L
 from repro.core import measure
+from repro.distributed import decomp
 from repro.distributed import halo
 from repro.distributed import ising as dising
 
@@ -62,13 +63,8 @@ def _local_blocked(full: jax.Array, bs: int) -> jax.Array:
     return jnp.stack([L.block(q[i], bs) for i in range(4)])
 
 
-def _shift(line: jax.Array, axes, n: int, delta: int) -> jax.Array:
-    """Receive the ``line`` sent by the neighbour ``delta`` hops away on the
-    device ring (identity when the ring has one device — the local torus
-    wrap already supplied the right line)."""
-    if n == 1:
-        return line
-    return lax.ppermute(line, axes, halo._perm(n, delta))
+def _spec(cfg, nrows: int, ncols: int) -> halo.HaloSpec:
+    return halo.spec2d(cfg.row_axes, cfg.col_axes, nrows, ncols)
 
 
 def _device_geometry(qb_local, cfg, nrows: int, ncols: int):
@@ -76,28 +72,11 @@ def _device_geometry(qb_local, cfg, nrows: int, ncols: int):
     traced global offsets / index grid."""
     _, mrl, mcl, bs, _ = qb_local.shape
     lh, lw = 2 * mrl * bs, 2 * mcl * bs
-    dr = lax.axis_index(cfg.row_axes)
-    dc = lax.axis_index(cfg.col_axes)
-    roff, coff = dr * lh, dc * lw
+    spec = _spec(cfg, nrows, ncols)
+    roff, coff = spec.offsets((lh, lw))
     H, W = lh * nrows, lw * ncols
     gi = B.global_index(lh, lw, roff, coff, W)
     return lh, lw, roff, coff, H, W, gi
-
-
-def halo_east_south(lf, cfg, nrows: int, ncols: int) -> tuple:
-    """(east, south) neighbour-value arrays of a device-local full view:
-    local torus rolls with the wrap line replaced by the neighbouring
-    device's boundary line (one ``ppermute`` per real device edge).
-    Spin-model agnostic — shared by the bond stage here and the Potts
-    measurement plane (:mod:`repro.potts.mesh`)."""
-    east = jnp.roll(lf, -1, 1)
-    south = jnp.roll(lf, -1, 0)
-    if ncols > 1:
-        east = east.at[:, -1].set(_shift(lf[:, 0], cfg.col_axes, ncols, -1))
-    if nrows > 1:
-        south = south.at[-1, :].set(
-            _shift(lf[0, :], cfg.row_axes, nrows, -1))
-    return east, south
 
 
 def global_labels_local(lf, key, cfg, threshold, geometry, nrows, ncols):
@@ -114,22 +93,24 @@ def global_labels_local(lf, key, cfg, threshold, geometry, nrows, ncols):
     applied afterwards differ.
     """
     lh, lw, roff, coff, H, W, gi = geometry
+    spec = _spec(cfg, nrows, ncols)
     kb = jax.random.fold_in(key, 0)
 
     # -- 1. bonds (with spin halos at device boundaries) -------------------
-    east, south = halo_east_south(lf, cfg, nrows, ncols)
+    east = spec.neighbor(lf, 1, +1)
+    south = spec.neighbor(lf, 0, +1)
     br, bd = B.fk_bonds(lf, kb, threshold, east=east, south=south, gi=gi)
 
     # Boundary bonds owned by the west/north neighbour, recomputed locally
     # from the same global counters (only needed across real device edges).
     if ncols > 1:
-        west_spin = _shift(lf[:, -1], cfg.col_axes, ncols, +1)
+        west_spin = spec.plane(lf, 1, -1)
         gi_w = ((roff + jnp.arange(lh, dtype=jnp.int32)) * W
                 + (coff - 1) % W)
         bl0 = ((lf[:, 0] == west_spin)
                & B.active(B.bond_bits(kb, gi_w, 0), threshold))
     if nrows > 1:
-        north_spin = _shift(lf[-1, :], cfg.row_axes, nrows, +1)
+        north_spin = spec.plane(lf, 0, -1)
         gi_n = (((roff - 1) % H) * W
                 + coff + jnp.arange(lw, dtype=jnp.int32))
         bu0 = ((lf[0, :] == north_spin)
@@ -153,16 +134,16 @@ def global_labels_local(lf, key, cfg, threshold, geometry, nrows, ncols):
             lab, _ = carry
             new = lab
             if ncols > 1:
-                east_lab = _shift(lab[:, 0], cfg.col_axes, ncols, -1)
+                east_lab = spec.plane(lab, 1, +1)
                 new = new.at[:, -1].min(
                     jnp.where(br[:, -1], east_lab, _INT_MAX))
-                west_lab = _shift(lab[:, -1], cfg.col_axes, ncols, +1)
+                west_lab = spec.plane(lab, 1, -1)
                 new = new.at[:, 0].min(jnp.where(bl0, west_lab, _INT_MAX))
             if nrows > 1:
-                south_lab = _shift(lab[0, :], cfg.row_axes, nrows, -1)
+                south_lab = spec.plane(lab, 0, +1)
                 new = new.at[-1, :].min(
                     jnp.where(bd[-1, :], south_lab, _INT_MAX))
-                north_lab = _shift(lab[-1, :], cfg.row_axes, nrows, +1)
+                north_lab = spec.plane(lab, 0, -1)
                 new = new.at[0, :].min(jnp.where(bu0, north_lab, _INT_MAX))
             # hook: collapse every local cluster to its new minimum, so a
             # boundary improvement reaches the opposite boundary in ONE step
@@ -199,61 +180,49 @@ def _local_cluster_sweep(lf, key, cfg, algorithm, threshold, geometry,
     return jnp.where(flip, -lf, lf), glab
 
 
-def _make_runner(mesh, cfg, algorithm, n_sweeps, measure_every, measured):
+def mesh_model(mesh, cfg, algorithm: str) -> decomp.MeshModel:
+    """The sharded-cluster binding of the generic decomposition driver:
+    one SW/Wolff sweep of the device-local full view as the site rule,
+    ``blocked_stats`` with HaloSpec edges as the measurement."""
     nrows = halo.axis_size(mesh, cfg.row_axes)
     ncols = halo.axis_size(mesh, cfg.col_axes)
-    spec = dising.lattice_spec(cfg)
+    hspec = _spec(cfg, nrows, ncols)
     axes = dising._stats_axes(cfg)
     threshold = B.bond_threshold_u24(cfg.beta)
+    edges = halo.blocked_quad_edges(hspec)
     n_dev = nrows * ncols
 
-    def local_run(qb, key):
+    def sweep(qb, key, step):
         bs = qb.shape[-1]
         geom = _device_geometry(qb, cfg, nrows, ncols)
+        lf = _local_full(qb)
+        k = jax.random.fold_in(key, step)
+        new, _ = _local_cluster_sweep(lf, k, cfg, algorithm, threshold,
+                                      geom, nrows, ncols)
+        return _local_blocked(new, bs)
+
+    def stats(qb):
         n_spins = 4 * qb[0].size * n_dev
-        edges = halo.halo_edges(cfg.row_axes, cfg.col_axes, nrows, ncols)
+        return measure.blocked_stats(qb, n_spins, edges=edges,
+                                     axis_names=axes)
 
-        def sweep_once(step, qb):
-            lf = _local_full(qb)
-            k = jax.random.fold_in(key, step)
-            new, _ = _local_cluster_sweep(lf, k, cfg, algorithm, threshold,
-                                          geom, nrows, ncols)
-            return _local_blocked(new, bs)
-
-        if not measured:
-            qb = lax.fori_loop(0, n_sweeps, sweep_once, qb)
-            return qb
-
-        def body(step, carry):
-            qb, mom = carry
-            qb = sweep_once(step, qb)
-            m, e = measure.blocked_stats(qb, n_spins, edges=edges,
-                                         axis_names=axes)
-            mom = measure.accumulate(mom, m, e, step, measure_every)
-            return qb, mom
-
-        qb, mom = lax.fori_loop(0, n_sweeps, body,
-                                (qb, measure.init_moments()))
-        return qb, mom
-
-    out_specs = ((spec, measure.Moments(*([P()] * measure.N_FIELDS)))
-                 if measured else spec)
-    mapped = shard_map(local_run, mesh=mesh, check_vma=False,
-                       in_specs=(spec, P()), out_specs=out_specs)
-    return jax.jit(mapped, donate_argnums=(0,))
+    return decomp.MeshModel(state_spec=dising.lattice_spec(cfg),
+                            sweep=sweep, stats=stats)
 
 
 def make_cluster_run_fn(mesh, cfg, algorithm: str, n_sweeps: int,
                         measure_every: int = 1):
     """Measured sharded cluster chain:
     ``run(qb_global, key) -> (qb_global, Moments)``."""
-    return _make_runner(mesh, cfg, algorithm, n_sweeps, measure_every, True)
+    return decomp.make_run_chain_fn(mesh, mesh_model(mesh, cfg, algorithm),
+                                    n_sweeps, measure_every)
 
 
 def make_cluster_sweeps_fn(mesh, cfg, algorithm: str, n_sweeps: int):
     """Measurement-free sharded cluster chain:
     ``run(qb_global, key) -> qb_global``."""
-    return _make_runner(mesh, cfg, algorithm, n_sweeps, 1, False)
+    return decomp.make_run_sweeps_fn(mesh, mesh_model(mesh, cfg, algorithm),
+                                     n_sweeps)
 
 
 def make_labels_fn(mesh, cfg):

@@ -9,6 +9,14 @@ kernel K (exactly Algorithm 1 applied slice-wise, batched over D), and the
 2 depth neighbours are rolls — so 2/3 of the stencil runs on the matrix
 unit. Acceptance nn·sigma ∈ {-6..6} → a 7-entry LUT.
 
+RNG: per-site uniforms are counter hashes of the *global* linear site
+index (:func:`site_uniforms3d`, same threefry scheme as the Potts
+checkerboard and FK bond planes), u24 bits mapped to f32 exactly
+(``u24 / 2^24`` is a 24-bit-mantissa value scaled by a power of two).
+Any spatial decomposition therefore draws bit-identical uniforms per
+site — the property the sharded cube (:mod:`repro.distributed.ising3d`)
+relies on to be bitwise-equal to :func:`run_sweeps3d` on one device.
+
 The known critical coupling: beta_c ≈ 0.2216546 (T_c ≈ 4.5115).
 """
 from __future__ import annotations
@@ -16,6 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.cluster import bonds as B
 from repro.core import lattice as L
 
 BETA_C_3D = 0.2216546
@@ -69,12 +78,36 @@ def _acceptance3d(nn: jax.Array, sigma: jax.Array, beta) -> jax.Array:
     return jnp.take(table, idx)
 
 
+def parity_mask3d(shape: tuple, color: int, offsets=(0, 0, 0)) -> jax.Array:
+    """Bool [D, H, W] mask of sites with *global* parity ``color``;
+    ``offsets`` is the patch origin on a decomposed cube (traced OK)."""
+    d, h, w = shape
+    i = ((offsets[0] + jnp.arange(d, dtype=jnp.int32))[:, None, None]
+         + (offsets[1] + jnp.arange(h, dtype=jnp.int32))[None, :, None]
+         + (offsets[2] + jnp.arange(w, dtype=jnp.int32))[None, None, :])
+    return i % 2 == color
+
+
+def global_index3d(shape: tuple) -> jax.Array:
+    """int32 [D, H, W] linear site indices of a full (undecomposed) cube."""
+    d, h, w = shape
+    return jnp.arange(d * h * w, dtype=jnp.int32).reshape(shape)
+
+
+def site_uniforms3d(key: jax.Array, gi: jax.Array) -> jax.Array:
+    """f32 uniforms in [0, 1) hashed from global site indices ``gi`` —
+    counter-based, so every spatial decomposition draws bit-identical
+    values per site (u24 / 2^24 is exact in f32)."""
+    bits = B.counter_bits(key, gi)
+    return (bits >> 8).astype(jnp.float32) / jnp.float32(1 << 24)
+
+
 def update_color3d(full: jax.Array, probs: jax.Array, beta, color: int,
-                   nn_fn=nn_matmul3d) -> jax.Array:
-    d, h, w = full.shape
-    i = (jnp.arange(d)[:, None, None] + jnp.arange(h)[None, :, None]
-         + jnp.arange(w)[None, None, :])
-    mask = (i % 2 == color)
+                   nn_fn=nn_matmul3d, mask: jax.Array = None) -> jax.Array:
+    """One half-sweep; ``mask`` overrides the local parity mask (sharded
+    paths pass :func:`parity_mask3d` with their global offsets)."""
+    if mask is None:
+        mask = parity_mask3d(full.shape, color)
     acc = _acceptance3d(nn_fn(full).astype(full.dtype), full, beta)
     flips = (probs.astype(jnp.float32) < acc) & mask
     return jnp.where(flips, -full, full)
@@ -82,10 +115,12 @@ def update_color3d(full: jax.Array, probs: jax.Array, beta, color: int,
 
 def sweep3d(full: jax.Array, key: jax.Array, step, beta,
             nn_fn=nn_matmul3d) -> jax.Array:
-    """One full 3-D sweep (both colours), counter-based RNG."""
+    """One full 3-D sweep (both colours), fully counter-based RNG
+    (threefry hash of the global site index per colour update)."""
+    gi = global_index3d(full.shape)
     for color in (0, 1):
         k = jax.random.fold_in(jax.random.fold_in(key, step), color)
-        probs = jax.random.uniform(k, full.shape, jnp.float32)
+        probs = site_uniforms3d(k, gi)
         full = update_color3d(full, probs, beta, color, nn_fn)
     return full
 

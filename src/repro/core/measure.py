@@ -132,11 +132,25 @@ def sweep_compact_measured(quads: jax.Array, probs: jax.Array, beta,
 class Moments(NamedTuple):
     """Running sums of the Fig.-4 statistics (scalars, f32).
 
-    ``n`` counts accumulated samples; ``m_abs``/``e``/``m2``/``m4``/``e2``
-    are sums of |m|, E/spin, m^2, m^4, E^2 (the E^2 stream is what lets
-    the mesh/opt/kernel fori_loop paths report specific heat
-    C = beta^2 N (<E^2> - <E>^2) without ever keeping a per-sweep E trace
-    — see :func:`repro.core.observables.specific_heat_from_moments`).
+    ``n`` counts accumulated samples; ``m_abs``/``m2``/``m4`` are sums of
+    |m|, m^2, m^4. The energy stream is **mean-shifted** (Welford-style):
+    ``e_ref`` captures the first kept sample as a running reference, and
+    ``de``/``de2`` accumulate sums of (E - e_ref) and (E - e_ref)^2. The
+    raw-E^2 scheme this replaces rounded each e^2 sample to f32 (~1.2e-7
+    relative of E^2 ~ O(1)) while the physical fluctuation
+    <E^2> - <E>^2 = C / (beta^2 N) shrinks with system size — beyond
+    ~10^6-10^7 spins the specific heat drowned in rounding noise. Shifted,
+    each squared sample is O(fluctuation) itself, so the relative rounding
+    stays ~1.2e-7 of the *fluctuation* at any lattice size; the subtraction
+    E - e_ref is f32-exact near the reference (Sterbenz) and the unshifted
+    moments are recovered exactly in the f64 ``finalize``:
+    <E> = e_ref + <d>, <E^2> - <E>^2 = <d^2> - <d>^2.
+
+    This is what lets the mesh/opt/kernel fori_loop paths report specific
+    heat C = beta^2 N (<E^2> - <E>^2) at production lattice sizes without
+    ever keeping a per-sweep E trace — see
+    :func:`repro.core.observables.specific_heat_from_moments`.
+
     The ``c_*`` fields carry Kahan compensation for the value sums: plain
     f32 accumulation stalls once a sum outgrows its per-sweep increment by
     ~2^24 (a few million sweeps — exactly the run lengths the streaming
@@ -146,17 +160,18 @@ class Moments(NamedTuple):
     """
     n: jax.Array
     m_abs: jax.Array
-    e: jax.Array
     m2: jax.Array
     m4: jax.Array
-    e2: jax.Array
+    e_ref: jax.Array
+    de: jax.Array
+    de2: jax.Array
     c_m_abs: jax.Array
-    c_e: jax.Array
     c_m2: jax.Array
     c_m4: jax.Array
-    c_e2: jax.Array
+    c_de: jax.Array
+    c_de2: jax.Array
 
-N_FIELDS = 11
+N_FIELDS = 12
 
 
 def init_moments(batch_shape=()) -> Moments:
@@ -187,25 +202,33 @@ def accumulate(mom: Moments, m: jax.Array, e: jax.Array,
     if step is not None and (measure_every > 1 or burnin):
         keep = ((step - burnin) % measure_every == 0) & (step >= burnin)
         w = keep.astype(jnp.float32)
+    # The first KEPT sample becomes the running energy reference; every
+    # later sample accumulates its (exact, small) deviation from it.
+    e_ref = jnp.where((mom.n == 0) & (w > 0), e, mom.e_ref)
+    d = e - e_ref
     am = jnp.abs(m)
     s1, c1 = _kahan_add(mom.m_abs, mom.c_m_abs, w * am)
-    s2, c2 = _kahan_add(mom.e, mom.c_e, w * e)
-    s3, c3 = _kahan_add(mom.m2, mom.c_m2, w * m * m)
-    s4, c4 = _kahan_add(mom.m4, mom.c_m4, w * m ** 4)
-    s5, c5 = _kahan_add(mom.e2, mom.c_e2, w * e * e)
+    s2, c2 = _kahan_add(mom.m2, mom.c_m2, w * m * m)
+    s3, c3 = _kahan_add(mom.m4, mom.c_m4, w * m ** 4)
+    s4, c4 = _kahan_add(mom.de, mom.c_de, w * d)
+    s5, c5 = _kahan_add(mom.de2, mom.c_de2, w * d * d)
     # n grows by exact integers: exact in f32 to 2^24 samples, and the
     # f64 finalize below reads it before that matters at realistic
     # measure_every settings.
-    return Moments(mom.n + w, s1, s2, s3, s4, s5, c1, c2, c3, c4, c5)
+    return Moments(mom.n + w, s1, s2, s3, e_ref, s4, s5,
+                   c1, c2, c3, c4, c5)
 
 
 def finalize(mom: Moments) -> dict:
     """Host-side reduction of running sums to the Fig.-4 dict (numpy f64;
-    the Kahan compensation terms fold back in here).
+    the Kahan compensation terms fold back in here and the mean-shifted
+    energy stream is unshifted exactly: E = e_ref + <d>,
+    E_var = <d^2> - <d>^2, E2 = E_var + E^2).
 
     Keys match :func:`repro.core.observables.chain_statistics`:
-    m_abs, m2, m4, U4, E, E2, n_samples (E2 feeds
-    ``observables.specific_heat_from_moments``).
+    m_abs, m2, m4, U4, E, E2, E_var, n_samples (E_var feeds
+    ``observables.specific_heat_from_moments`` rounding-noise-free at any
+    lattice size; E2 is kept for the raw-moment consumers).
     """
     import numpy as np
 
@@ -214,13 +237,16 @@ def finalize(mom: Moments) -> dict:
 
     n = np.maximum(np.asarray(mom.n, np.float64), 1.0)
     m_abs = total(mom.m_abs, mom.c_m_abs) / n
-    e = total(mom.e, mom.c_e) / n
     m2 = total(mom.m2, mom.c_m2) / n
     m4 = total(mom.m4, mom.c_m4) / n
-    e2 = total(mom.e2, mom.c_e2) / n
+    d = total(mom.de, mom.c_de) / n
+    d2 = total(mom.de2, mom.c_de2) / n
+    e = np.asarray(mom.e_ref, np.float64) + d
+    e_var = d2 - d ** 2
     u4 = 1.0 - m4 / np.maximum(3.0 * m2 ** 2, 1e-300)
     out = {"m_abs": m_abs, "m2": m2, "m4": m4, "U4": u4, "E": e,
-           "E2": e2, "n_samples": np.asarray(mom.n, np.float64)}
+           "E2": e_var + e ** 2, "E_var": e_var,
+           "n_samples": np.asarray(mom.n, np.float64)}
     if np.ndim(n) == 0:
         out = {k: (int(v) if k == "n_samples" else float(v))
                for k, v in out.items()}
@@ -232,16 +258,21 @@ def moments_from_series(ms, es, burnin: int = 0,
     """Fold an already-collected per-sweep series into Moments — keeps the
     scan paths (which stream full series anyway) on the same reporting
     contract as the fori_loop paths that only accumulate. Sums in f64 on
-    the host (no compensation needed)."""
+    the host (no compensation needed); the energy reference is the first
+    kept sample, matching :func:`accumulate`'s running-reference rule."""
     import numpy as np
     m = np.asarray(ms, np.float64)[..., burnin::measure_every]
     e = np.asarray(es, np.float64)[..., burnin::measure_every]
     n = jnp.asarray(np.full(m.shape[:-1], m.shape[-1], np.float32))
     z = jnp.zeros(m.shape[:-1], jnp.float32)
+    e_ref = (e[..., 0] if e.shape[-1]
+             else np.zeros(e.shape[:-1], np.float64))
+    d = e - e_ref[..., None] if e.shape[-1] else e
     return Moments(n,
                    jnp.asarray(np.abs(m).sum(-1), jnp.float32),
-                   jnp.asarray(e.sum(-1), jnp.float32),
                    jnp.asarray((m * m).sum(-1), jnp.float32),
                    jnp.asarray((m ** 4).sum(-1), jnp.float32),
-                   jnp.asarray((e * e).sum(-1), jnp.float32),
+                   jnp.asarray(e_ref, jnp.float32),
+                   jnp.asarray(d.sum(-1), jnp.float32),
+                   jnp.asarray((d * d).sum(-1), jnp.float32),
                    z, z, z, z, z)

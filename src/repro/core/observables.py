@@ -61,21 +61,23 @@ def specific_heat(e_samples, beta: float, n_spins: int) -> float:
 def specific_heat_from_moments(moments: dict, beta: float,
                                n_spins: int):
     """C from a *streamed* moments dict (``measure.finalize`` output):
-    C = beta^2 * N * (E2 - E^2). The mesh/opt/kernel fori_loop paths never
-    keep a per-sweep E trace, so this is the only way to get C there —
-    the E^2 accumulator makes the fluctuation available without one.
+    C = beta^2 * N * (<E^2> - <E>^2). The mesh/opt/kernel fori_loop paths
+    never keep a per-sweep E trace, so this is the only way to get C there.
     Scalar or per-replica array, matching the moments shape.
 
-    Precision note: each e^2 sample is f32-rounded before accumulation
-    (~1.2e-7 relative), while the fluctuation <E^2> - <E>^2 shrinks as
-    C/(beta^2 N) — so beyond N ~ 10^6..10^7 spins the streamed C is
-    rounding-noise dominated (the per-sweep-trace estimator on scan paths
-    is f64 and unaffected). A mean-shifted accumulator is the planned fix
-    (see ROADMAP); at test/bench scales the two agree to ~1e-3."""
+    The fluctuation is read from the mean-shifted ``E_var`` stream when
+    present (exact at any lattice size: samples accumulate as
+    (E - E_ref)^2 around a running reference, so the f32 rounding of each
+    sample is ~1.2e-7 of the *fluctuation* rather than of E^2 — the old
+    raw-E^2 scheme lost C below rounding noise beyond ~10^6-10^7 spins);
+    legacy dicts without ``E_var`` fall back to E2 - E^2."""
     import numpy as np
-    e = np.asarray(moments["E"], np.float64)
-    e2 = np.asarray(moments["E2"], np.float64)
-    c = beta ** 2 * n_spins * (e2 - e ** 2)
+    if "E_var" in moments:
+        e_var = np.asarray(moments["E_var"], np.float64)
+    else:
+        e = np.asarray(moments["E"], np.float64)
+        e_var = np.asarray(moments["E2"], np.float64) - e ** 2
+    c = beta ** 2 * n_spins * e_var
     return float(c) if np.ndim(c) == 0 else c
 
 

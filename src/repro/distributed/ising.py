@@ -15,8 +15,6 @@ independent of how many devices participate.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +25,7 @@ from repro.core import checkerboard as cb
 from repro.core import lattice as L
 from repro.core import measure
 from repro.core import update_rules
+from repro.distributed import decomp
 from repro.distributed import halo
 from repro.kernels import ops as kops
 
@@ -191,30 +190,63 @@ def make_sweep_tuple_fn(mesh, cfg: DistIsingConfig):
     return jax.jit(mapped, donate_argnums=(0, 1, 2, 3))
 
 
+def halo_spec(mesh, cfg: DistIsingConfig) -> halo.HaloSpec:
+    """The 2-axis :class:`repro.distributed.halo.HaloSpec` of this config."""
+    return halo.spec2d(cfg.row_axes, cfg.col_axes,
+                       halo.axis_size(mesh, cfg.row_axes),
+                       halo.axis_size(mesh, cfg.col_axes))
+
+
+def mesh_model(mesh, cfg: DistIsingConfig) -> decomp.MeshModel:
+    """The 2-D Ising quad binding of the generic decomposition driver:
+    the per-colour Algorithm-2 update as the site rule, blocked-quad halo
+    edges from the :class:`HaloSpec`, and the fused measured sweep that
+    reuses the white half-update's own nn sums (XLA backend)."""
+    spec = halo_spec(mesh, cfg)
+    ncols = spec.axes[1].n_shards
+    edges = halo.blocked_quad_edges(spec)
+    axes = _stats_axes(cfg)
+    n_dev = spec.n_devices()
+
+    def sweep(quads, key, step):
+        dkey = _device_key(key, cfg, ncols)
+        for color in (0, 1):
+            quads = _local_color_update(quads, dkey, step, color, cfg,
+                                        edges)
+        return quads
+
+    def stats(quads):
+        n_spins = 4 * quads[0].size * n_dev
+        return measure.blocked_stats(quads, n_spins, edges=edges,
+                                     axis_names=axes)
+
+    def sweep_measured(quads, key, step):
+        dkey = _device_key(key, cfg, ncols)
+        n_spins = 4 * quads[0].size * n_dev
+        quads = _local_color_update(quads, dkey, step, 0, cfg, edges)
+        quads, st = _local_color_update(quads, dkey, step, 1, cfg,
+                                        edges, return_stats=True)
+        if st is not None:
+            new0, new1, nn0, nn1 = st
+            m = measure.magnetization_mean(quads, n_spins, axes)
+            e = measure.bond_energy_from_nn(new0, new1, nn0, nn1,
+                                            n_spins, axes)
+        else:  # pallas_lines: nn stays in VMEM; one stencil recompute
+            m, e = measure.blocked_stats(quads, n_spins, edges=edges,
+                                         axis_names=axes)
+        return quads, (m, e)
+
+    return decomp.MeshModel(
+        state_spec=lattice_spec(cfg), sweep=sweep, stats=stats,
+        sweep_measured=sweep_measured,
+        unpack=lambda qb: tuple(qb[i] for i in range(4)),
+        pack=jnp.stack)
+
+
 def make_run_sweeps_fn(mesh, cfg: DistIsingConfig, n_sweeps: int):
     """Returns jitted ``run(qb_global, key) -> qb_global`` (n_sweeps sweeps,
     measurement-free — the paper's throughput benchmark loop)."""
-    nrows = halo.axis_size(mesh, cfg.row_axes)
-    ncols = halo.axis_size(mesh, cfg.col_axes)
-    spec = lattice_spec(cfg)
-
-    def local_run(qb, key):
-        edges = halo.halo_edges(cfg.row_axes, cfg.col_axes, nrows, ncols)
-        dkey = _device_key(key, cfg, ncols)
-
-        def body(step, quads):
-            for color in (0, 1):
-                quads = _local_color_update(quads, dkey, step, color, cfg,
-                                            edges)
-            return quads
-
-        out = jax.lax.fori_loop(0, n_sweeps, body,
-                                tuple(qb[i] for i in range(4)))
-        return jnp.stack(out)
-
-    mapped = shard_map(local_run, mesh=mesh, check_vma=False,
-                           in_specs=(spec, P()), out_specs=spec)
-    return jax.jit(mapped, donate_argnums=(0,))
+    return decomp.make_run_sweeps_fn(mesh, mesh_model(mesh, cfg), n_sweeps)
 
 
 def make_sweep_with_bits_fn(mesh, cfg: DistIsingConfig):
@@ -260,62 +292,12 @@ def make_run_chain_fn(mesh, cfg: DistIsingConfig, n_sweeps: int,
     Replaces the old magnetization-only ``magnetization_global`` helper:
     mesh runs now stream the full Fig.-4 moment set.
     """
-    nrows = halo.axis_size(mesh, cfg.row_axes)
-    ncols = halo.axis_size(mesh, cfg.col_axes)
-    spec = lattice_spec(cfg)
-    axes = _stats_axes(cfg)
-    n_dev = nrows * ncols
-
-    def local_run(qb, key):
-        edges = halo.halo_edges(cfg.row_axes, cfg.col_axes, nrows, ncols)
-        dkey = _device_key(key, cfg, ncols)
-        n_spins = 4 * qb[0].size * n_dev  # global spin count (static)
-
-        def body(step, carry):
-            quads, mom = carry
-            quads = _local_color_update(quads, dkey, step, 0, cfg, edges)
-            quads, stats = _local_color_update(quads, dkey, step, 1, cfg,
-                                               edges, return_stats=True)
-            if stats is not None:
-                new0, new1, nn0, nn1 = stats
-                m = measure.magnetization_mean(quads, n_spins, axes)
-                e = measure.bond_energy_from_nn(new0, new1, nn0, nn1,
-                                                n_spins, axes)
-            else:  # pallas_lines: nn stays in VMEM; one stencil recompute
-                m, e = measure.blocked_stats(quads, n_spins, edges=edges,
-                                             axis_names=axes)
-            mom = measure.accumulate(mom, m, e, step, measure_every)
-            return quads, mom
-
-        quads, mom = jax.lax.fori_loop(
-            0, n_sweeps, body,
-            (tuple(qb[i] for i in range(4)), measure.init_moments()))
-        return jnp.stack(quads), mom
-
-    mapped = shard_map(local_run, mesh=mesh, check_vma=False,
-                       in_specs=(spec, P()),
-                       out_specs=(spec,
-                                  measure.Moments(
-                                      *([P()] * measure.N_FIELDS))))
-    return jax.jit(mapped, donate_argnums=(0,))
+    return decomp.make_run_chain_fn(mesh, mesh_model(mesh, cfg), n_sweeps,
+                                    measure_every)
 
 
 def global_stats(mesh, cfg: DistIsingConfig):
     """Jitted exact (m, E/spin) of the sharded blocked lattice — the
     standalone companion of :func:`make_run_chain_fn` for logging between
     compiled chunks (supersedes ``magnetization_global``)."""
-    nrows = halo.axis_size(mesh, cfg.row_axes)
-    ncols = halo.axis_size(mesh, cfg.col_axes)
-    spec = lattice_spec(cfg)
-    axes = _stats_axes(cfg)
-    n_dev = nrows * ncols
-
-    def local_stats(qb):
-        edges = halo.halo_edges(cfg.row_axes, cfg.col_axes, nrows, ncols)
-        n_spins = 4 * qb[0].size * n_dev
-        return measure.blocked_stats(qb, n_spins, edges=edges,
-                                     axis_names=axes)
-
-    mapped = shard_map(local_stats, mesh=mesh, check_vma=False,
-                       in_specs=(spec,), out_specs=(P(), P()))
-    return jax.jit(mapped)
+    return decomp.global_stats(mesh, mesh_model(mesh, cfg))

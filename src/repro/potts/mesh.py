@@ -1,48 +1,59 @@
-"""Sharded q-state Potts cluster updates under ``shard_map``.
+"""Sharded q-state Potts updates under ``shard_map``: cluster AND
+checkerboard dynamics, both bindings of the generic decomposition driver
+(:mod:`repro.distributed.decomp`) over the one HaloSpec ppermute
+vocabulary (:mod:`repro.distributed.halo`).
 
-Thin Potts layer over the sharded cluster machinery in
-:mod:`repro.cluster.mesh`: the colour lattice lives in the same blocked
+**Cluster plane** (:func:`make_potts_run_fn` / :func:`make_potts_sweeps_fn`):
+a thin Potts layer over the sharded cluster machinery in
+:mod:`repro.cluster.mesh` — the colour lattice lives in the blocked
 ``[4, MR, MC, bs, bs]`` layout (int32 colours instead of +-1 spins), each
 sweep reconstructs the device-local full view, and
-:func:`repro.cluster.mesh.global_labels_local` runs unchanged — FK bonds
+:func:`repro.cluster.mesh.global_labels_local` runs unchanged: FK bonds
 activate on colour *equality* with the Potts threshold p = 1 - exp(-beta),
-halo spin lines arrive by ``ppermute``, local labels merge to canonical
-global minima through the same ``segment_min`` while_loop.
-
-Only the per-cluster decision is new, and it stays gather-free:
+halo colour lines arrive by ``ppermute``, local labels merge to canonical
+global minima through the same ``segment_min`` while_loop. Only the
+per-cluster decision is new, and it stays gather-free:
 
 * Swendsen-Wang: every site hashes its (globally merged) cluster label and
-  maps the hash to a uniform colour (``potts.bonds.cluster_states``) — all
-  sites of a cluster agree without any cross-device traffic.
-* Wolff: the seed site and the colour shift are drawn from the replicated
-  sweep key; the seed's label is recovered with one masked-sum ``psum``,
-  and the shift formula ``(sigma + shift) % q`` is constant over the
-  (monochrome) cluster, so no cluster-colour gather is needed either.
+  maps the hash to a uniform colour (``potts.bonds.cluster_states``).
+* Wolff: seed site and colour shift come from the replicated sweep key;
+  the seed's label is recovered with one masked-sum ``psum``, and
+  ``(sigma + shift) % q`` is constant over the (monochrome) cluster.
 
-Every random decision is a counter hash of global indices or a draw from
-the replicated key, so the sharded chain is **bitwise identical** to
-:mod:`repro.potts.sweep` on one device (pinned in ``tests/test_potts.py``
-on 2x2 and 4x1 shard grids).
+**Checkerboard plane** (:func:`make_potts_cb_run_fn` /
+:func:`make_potts_cb_sweeps_fn`): the single-site heat-bath / Metropolis
+dynamics of :mod:`repro.potts.rules` on a mesh. The full ``[H, W]`` int32
+colour view is sharded directly (``P(row_axes, col_axes)`` — no blocked
+layout; the int stencil has no matmul to feed), and each half-update runs
+:func:`repro.potts.rules.checkerboard_sweep` with the device-local
+geometry plugged in: global site indices for the counter-based RNG,
+``HaloSpec.neighbor`` colour halos (one ppermute per sharded edge per
+half-update), and parity masks built from the patch's global offsets.
+
+Every random decision on both planes is a counter hash of global indices
+or a draw from the replicated key, so the sharded chains are **bitwise
+identical** to :mod:`repro.potts.sweep` / :mod:`repro.potts.rules` on one
+device (pinned in ``tests/test_potts.py`` on 2x2 and 4x1 shard grids).
 
 Measurement streams the Potts order parameter (q * max_s rho_s - 1)/(q - 1)
 from ``psum``-reduced colour counts and the bond energy from halo-corrected
 agreement sums — integer-exact f32, accumulated into running
-:class:`repro.core.measure.Moments` (including the streamed E^2 for
-specific heat).
+:class:`repro.core.measure.Moments` (including the mean-shifted E
+fluctuation for specific heat).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map
+from repro.cluster import bonds as B
 from repro.cluster import mesh as cmesh
-from repro.core import measure
+from repro.distributed import decomp
 from repro.distributed import halo
 from repro.distributed import ising as dising
 from repro.potts import bonds as PB
+from repro.potts import rules as PR
 from repro.potts import sweep as psweep
 
 
@@ -66,7 +77,7 @@ def _local_potts_sweep(lf, key, cfg, q, algorithm, threshold, geometry,
                      f"use one of {psweep.ALGORITHMS}")
 
 
-def _local_stats(lf, cfg, q, nrows, ncols, n_spins, axes):
+def _local_stats(lf, spec, q, n_spins, axes):
     """(order parameter, E/spin) of the device-local patch, psum-reduced.
 
     Bond energy counts east/south colour agreements with halo-corrected
@@ -74,7 +85,8 @@ def _local_stats(lf, cfg, q, nrows, ncols, n_spins, axes):
     global max-density order parameter. All sums integer-exact in f32.
     """
     from repro.potts import state as PS
-    east, south = cmesh.halo_east_south(lf, cfg, nrows, ncols)
+    east = spec.neighbor(lf, 1, +1)
+    south = spec.neighbor(lf, 0, +1)
     agree = (jnp.sum((lf == east).astype(jnp.float32))
              + jnp.sum((lf == south).astype(jnp.float32)))
     e = -lax.psum(agree, axes) / jnp.float32(n_spins)
@@ -83,77 +95,120 @@ def _local_stats(lf, cfg, q, nrows, ncols, n_spins, axes):
     return order, e
 
 
-def _make_runner(mesh, cfg, q, algorithm, n_sweeps, measure_every, measured):
+# ---------------------------------------------------------------------------
+# Cluster plane (blocked layout, shared label machinery)
+# ---------------------------------------------------------------------------
+
+
+def mesh_model(mesh, cfg, q: int, algorithm: str) -> decomp.MeshModel:
+    """The sharded Potts-cluster binding of the decomposition driver."""
     nrows = halo.axis_size(mesh, cfg.row_axes)
     ncols = halo.axis_size(mesh, cfg.col_axes)
-    spec = dising.lattice_spec(cfg)
+    hspec = halo.spec2d(cfg.row_axes, cfg.col_axes, nrows, ncols)
     axes = dising._stats_axes(cfg)
     threshold = PB.bond_threshold_u24(cfg.beta)
     n_dev = nrows * ncols
 
-    def local_run(qb, key):
+    def sweep(qb, key, step):
         bs = qb.shape[-1]
         geom = cmesh._device_geometry(qb, cfg, nrows, ncols)
+        lf = cmesh._local_full(qb)
+        k = jax.random.fold_in(key, step)
+        new = _local_potts_sweep(lf, k, cfg, q, algorithm, threshold,
+                                 geom, nrows, ncols)
+        return cmesh._local_blocked(new, bs)
+
+    def stats(qb):
         n_spins = 4 * qb[0].size * n_dev
+        return _local_stats(cmesh._local_full(qb), hspec, q, n_spins, axes)
 
-        def sweep_once(step, qb):
-            lf = cmesh._local_full(qb)
-            k = jax.random.fold_in(key, step)
-            new = _local_potts_sweep(lf, k, cfg, q, algorithm, threshold,
-                                     geom, nrows, ncols)
-            return cmesh._local_blocked(new, bs)
-
-        if not measured:
-            return lax.fori_loop(0, n_sweeps, sweep_once, qb)
-
-        def body(step, carry):
-            qb, mom = carry
-            qb = sweep_once(step, qb)
-            m, e = _local_stats(cmesh._local_full(qb), cfg, q, nrows,
-                                ncols, n_spins, axes)
-            mom = measure.accumulate(mom, m, e, step, measure_every)
-            return qb, mom
-
-        qb, mom = lax.fori_loop(0, n_sweeps, body,
-                                (qb, measure.init_moments()))
-        return qb, mom
-
-    out_specs = ((spec, measure.Moments(*([P()] * measure.N_FIELDS)))
-                 if measured else spec)
-    mapped = shard_map(local_run, mesh=mesh, check_vma=False,
-                       in_specs=(spec, P()), out_specs=out_specs)
-    return jax.jit(mapped, donate_argnums=(0,))
+    return decomp.MeshModel(state_spec=dising.lattice_spec(cfg),
+                            sweep=sweep, stats=stats)
 
 
 def make_potts_run_fn(mesh, cfg, q: int, algorithm: str, n_sweeps: int,
                       measure_every: int = 1):
     """Measured sharded Potts cluster chain:
     ``run(qb_global, key) -> (qb_global, Moments)``."""
-    return _make_runner(mesh, cfg, q, algorithm, n_sweeps, measure_every,
-                        True)
+    return decomp.make_run_chain_fn(mesh, mesh_model(mesh, cfg, q,
+                                                     algorithm),
+                                    n_sweeps, measure_every)
 
 
 def make_potts_sweeps_fn(mesh, cfg, q: int, algorithm: str, n_sweeps: int):
     """Measurement-free sharded Potts cluster chain:
     ``run(qb_global, key) -> qb_global``."""
-    return _make_runner(mesh, cfg, q, algorithm, n_sweeps, 1, False)
+    return decomp.make_run_sweeps_fn(mesh, mesh_model(mesh, cfg, q,
+                                                      algorithm), n_sweeps)
 
 
 def global_stats(mesh, cfg, q: int):
     """Jitted ``stats(qb_global) -> (order, E/spin)`` over the sharded
     blocked colour lattice — the Potts twin of
     ``distributed.ising.global_stats`` (exact psums, no lattice gather)."""
+    return decomp.global_stats(mesh, mesh_model(mesh, cfg, q,
+                                                "swendsen_wang"))
+
+
+# ---------------------------------------------------------------------------
+# Checkerboard plane (full [H, W] view, single-site dynamics)
+# ---------------------------------------------------------------------------
+
+
+def cb_mesh_model(mesh, cfg, q: int, rule: str) -> decomp.MeshModel:
+    """The sharded Potts-checkerboard binding: single-site heat-bath /
+    Metropolis half-updates on the device-local colour patch, with the
+    global geometry (site counters, colour halos, offset parity masks)
+    plugged into the SAME :func:`repro.potts.rules.checkerboard_sweep`
+    the single-device path runs — bitwise-identical chains."""
     nrows = halo.axis_size(mesh, cfg.row_axes)
     ncols = halo.axis_size(mesh, cfg.col_axes)
-    spec = dising.lattice_spec(cfg)
+    hspec = halo.spec2d(cfg.row_axes, cfg.col_axes, nrows, ncols)
     axes = dising._stats_axes(cfg)
+    beta = cfg.beta
     n_dev = nrows * ncols
 
-    def local_stats(qb):
-        n_spins = 4 * qb[0].size * n_dev
-        return _local_stats(cmesh._local_full(qb), cfg, q, nrows, ncols,
-                            n_spins, axes)
+    def neighbors_fn(lf):
+        # (east, west, south, north) — potts.state.neighbor_states order
+        return (hspec.neighbor(lf, 1, +1), hspec.neighbor(lf, 1, -1),
+                hspec.neighbor(lf, 0, +1), hspec.neighbor(lf, 0, -1))
 
-    mapped = shard_map(local_stats, mesh=mesh, check_vma=False,
-                       in_specs=(spec,), out_specs=(P(), P()))
-    return jax.jit(mapped)
+    def sweep(lf, key, step):
+        lh, lw = lf.shape
+        roff, coff = hspec.offsets((lh, lw))
+        gi = B.global_index(lh, lw, roff, coff, lw * ncols)
+        masks = tuple(PR.parity_mask(lh, lw, c, roff, coff)
+                      for c in (0, 1))
+        return PR.checkerboard_sweep(lf, jax.random.fold_in(key, step),
+                                     beta, q, rule, gi=gi,
+                                     neighbors_fn=neighbors_fn,
+                                     masks=masks)
+
+    def stats(lf):
+        n_spins = lf.size * n_dev
+        return _local_stats(lf, hspec, q, n_spins, axes)
+
+    return decomp.MeshModel(state_spec=hspec.partition_spec(),
+                            sweep=sweep, stats=stats)
+
+
+def make_potts_cb_run_fn(mesh, cfg, q: int, rule: str, n_sweeps: int,
+                         measure_every: int = 1):
+    """Measured sharded Potts checkerboard chain over the full [H, W]
+    colour view: ``run(full_global, key) -> (full_global, Moments)``."""
+    return decomp.make_run_chain_fn(mesh, cb_mesh_model(mesh, cfg, q, rule),
+                                    n_sweeps, measure_every)
+
+
+def make_potts_cb_sweeps_fn(mesh, cfg, q: int, rule: str, n_sweeps: int):
+    """Measurement-free sharded Potts checkerboard chain:
+    ``run(full_global, key) -> full_global``."""
+    return decomp.make_run_sweeps_fn(mesh, cb_mesh_model(mesh, cfg, q,
+                                                         rule), n_sweeps)
+
+
+def cb_global_stats(mesh, cfg, q: int):
+    """Jitted ``stats(full_global) -> (order, E/spin)`` over the sharded
+    full-view colour lattice (checkerboard layout)."""
+    return decomp.global_stats(mesh, cb_mesh_model(mesh, cfg, q,
+                                                   "heat_bath"))

@@ -93,10 +93,16 @@ def metropolis_thresholds_traced(beta: jax.Array) -> jax.Array:
 
 
 def metropolis_color(full: jax.Array, key: jax.Array, thresholds,
-                     q: int, color: int, gi: jax.Array = None) -> jax.Array:
+                     q: int, color: int, gi: jax.Array = None,
+                     neighbors=None, mask: jax.Array = None) -> jax.Array:
     """One Metropolis half-update of parity class ``color``.
 
     ``thresholds`` is the [9] u24 acceptance table (ints or traced uint32).
+    ``gi`` / ``neighbors`` / ``mask`` default to the single-device full
+    view; the mesh path passes the device-local patch's global indices,
+    halo-corrected neighbour colours, and offset parity mask instead —
+    identical per-site math, so the sharded chain is bitwise the
+    single-device chain.
     """
     h, w = full.shape
     if gi is None:
@@ -104,12 +110,13 @@ def metropolis_color(full: jax.Array, key: jax.Array, thresholds,
     cand_bits = B.counter_bits(jax.random.fold_in(key, 0), gi)
     acc_bits = B.counter_bits(jax.random.fold_in(key, 1), gi)
     cand = uniform_other(cand_bits, full, q)
-    nbs = PS.neighbor_states(full)
+    nbs = PS.neighbor_states(full) if neighbors is None else neighbors
     dn = (PS.agreement_count(full, cand, nbs)
           - PS.agreement_count(full, full, nbs))        # in {-4..4}
     t = jnp.take(jnp.asarray(thresholds, jnp.uint32), dn + 4)
     accept = _u24(acc_bits) < t
-    mask = parity_mask(h, w, color)
+    if mask is None:
+        mask = parity_mask(h, w, color)
     return jnp.where(mask & accept, cand, full)
 
 
@@ -125,15 +132,18 @@ def heat_bath_weight_table(beta) -> jax.Array:
 
 
 def heat_bath_color(full: jax.Array, key: jax.Array, beta, q: int,
-                    color: int, gi: jax.Array = None) -> jax.Array:
+                    color: int, gi: jax.Array = None,
+                    neighbors=None, mask: jax.Array = None) -> jax.Array:
     """One heat-bath half-update: resample parity class ``color`` from the
-    exact conditional via cumulative u24 thresholds (module docstring)."""
+    exact conditional via cumulative u24 thresholds (module docstring).
+    ``gi``/``neighbors``/``mask`` overrides as in :func:`metropolis_color`
+    (the mesh path's device-local geometry)."""
     h, w = full.shape
     if gi is None:
         gi = B.global_index(h, w)
     u = _u24(B.counter_bits(key, gi))
     table = heat_bath_weight_table(beta)
-    nbs = PS.neighbor_states(full)
+    nbs = PS.neighbor_states(full) if neighbors is None else neighbors
     weights = [jnp.take(table, PS.agreement_count(full, s, nbs))
                for s in range(q)]
     cum = []
@@ -146,7 +156,8 @@ def heat_bath_color(full: jax.Array, key: jax.Array, beta, q: int,
     for s in range(q - 1):                   # cdf_{q-1} = 1 by construction
         t = jnp.ceil((cum[s] / total) * jnp.float32(_U24)).astype(jnp.uint32)
         new = new + (u >= jnp.minimum(t, jnp.uint32(_U24))).astype(jnp.int32)
-    mask = parity_mask(h, w, color)
+    if mask is None:
+        mask = parity_mask(h, w, color)
     return jnp.where(mask, new, full)
 
 
@@ -156,12 +167,20 @@ def heat_bath_color(full: jax.Array, key: jax.Array, beta, q: int,
 
 
 def checkerboard_sweep(full: jax.Array, key: jax.Array, beta, q: int,
-                       rule: str = "heat_bath") -> jax.Array:
+                       rule: str = "heat_bath", gi: jax.Array = None,
+                       neighbors_fn=None, masks=None) -> jax.Array:
     """One full sweep (both parity classes) under the per-sweep ``key``.
 
     ``beta`` may be a Python float or a traced scalar (multi-beta vmap);
     Metropolis thresholds are rebuilt per call either way — XLA constant-
     folds the static case to the host-integer table.
+
+    The mesh path passes the device-local geometry: ``gi`` (global site
+    indices of the patch), ``neighbors_fn(full)`` (halo-corrected
+    neighbour colours, re-evaluated between half-updates because the
+    first half-update changes what the second reads), and ``masks``
+    (per-colour parity masks built from global offsets). Defaults are the
+    single-device full view, so both paths share this one function.
     """
     if rule not in RULES:
         raise ValueError(f"unknown potts rule {rule!r}; use one of {RULES}")
@@ -169,10 +188,14 @@ def checkerboard_sweep(full: jax.Array, key: jax.Array, beta, q: int,
                   if rule == "metropolis" else None)
     for color in (0, 1):
         kc = jax.random.fold_in(key, color)
+        nbs = neighbors_fn(full) if neighbors_fn is not None else None
+        mask = masks[color] if masks is not None else None
         if rule == "heat_bath":
-            full = heat_bath_color(full, kc, beta, q, color)
+            full = heat_bath_color(full, kc, beta, q, color, gi=gi,
+                                   neighbors=nbs, mask=mask)
         else:
-            full = metropolis_color(full, kc, thresholds, q, color)
+            full = metropolis_color(full, kc, thresholds, q, color, gi=gi,
+                                    neighbors=nbs, mask=mask)
     return full
 
 

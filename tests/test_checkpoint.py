@@ -107,3 +107,61 @@ def test_elastic_restore_across_meshes(subproc, tmp_path):
     """
     out = subproc(restore_code, devices=2)
     assert "ELASTIC_OK" in out
+
+
+def test_restore_accepts_shape_dtype_struct_template(tmp_path):
+    """``like`` leaves may be ShapeDtypeStructs (the engine's
+    ``state_template()``) — dtype is honoured without allocating."""
+    arr = jnp.linspace(-1, 1, 12).astype(jnp.bfloat16).reshape(3, 4)
+    ckpt.save(str(tmp_path), {"qb": arr}, step=1)
+    like = {"qb": jax.ShapeDtypeStruct((3, 4), jnp.bfloat16)}
+    out = ckpt.restore(str(tmp_path), like)["qb"]
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(arr, np.float32))
+
+
+_RESUME_CASES = [
+    # (name, EngineConfig kwargs) — every checkpointable single-device
+    # scenario from the ISSUE-5 satellite: ensembles + cluster/Potts.
+    ("ensemble", dict(size=16, betas=(0.35, 0.44, 0.5), block_size=8)),
+    ("cluster", dict(size=16, beta=0.8, algorithm="swendsen_wang",
+                     block_size=8)),
+    ("potts_cb", dict(size=16, beta=1.0, model="potts", q=3,
+                      rule="heat_bath")),
+    ("potts_cluster", dict(size=16, beta=1.0, model="potts", q=3,
+                           algorithm="wolff")),
+]
+
+
+@pytest.mark.parametrize("name,kw", _RESUME_CASES)
+def test_resume_equals_straight_run_per_scenario(tmp_path, name, kw):
+    """Chunked run -> checkpoint -> restore (via state_template) ->
+    continue == uninterrupted chunked run, bitwise, for every scenario
+    whose state is a plain array (the restart-safety satellite)."""
+    from repro.api import EngineConfig, IsingEngine
+
+    engine = IsingEngine(EngineConfig(n_sweeps=4, **kw))
+    key = jax.random.PRNGKey(11)
+    st0 = engine.init(jax.random.PRNGKey(10))
+
+    def chunked(state, start, stop, chunk=4):
+        done = start
+        while done < stop:
+            state = engine.run_sweeps(state, jax.random.fold_in(key, done),
+                                      chunk)
+            done += chunk
+        return state
+
+    straight = jax.device_get(chunked(st0, 0, 8))
+
+    half = chunked(st0, 0, 4)
+    ckpt.save(str(tmp_path), {"qb": half}, step=4)
+    restored = ckpt.restore(str(tmp_path),
+                            {"qb": engine.state_template()})["qb"]
+    assert restored.shape == engine.state_template().shape, name
+    assert jnp.asarray(restored).dtype == engine.state_template().dtype
+    resumed = jax.device_get(chunked(jnp.asarray(restored), 4, 8))
+    np.testing.assert_array_equal(
+        np.asarray(straight, np.float32), np.asarray(resumed, np.float32),
+        err_msg=f"{name}: resume != straight run")

@@ -120,6 +120,29 @@ def test_moments_stream_e2_for_specific_heat():
     np.testing.assert_allclose(chi_stream, chi_series, rtol=1e-3)
 
 
+def test_mean_shifted_accumulator_beats_f32_rounding():
+    """The ROADMAP failure mode: E ~ O(1) with a fluctuation far below
+    f32's 1.2e-7 relative rounding of E^2. The raw-E^2 estimator would be
+    rounding-noise dominated (per-sample error ~4e-7 vs a true variance of
+    ~1e-10); the mean-shifted stream recovers it to f64-series accuracy."""
+    rng = np.random.default_rng(7)
+    es = (-1.9 + 1e-5 * rng.standard_normal(256)).astype(np.float32)
+    ms = rng.uniform(-1, 1, 256).astype(np.float32)
+    mom = measure.init_moments()
+    for step in range(256):
+        mom = measure.accumulate(mom, jnp.float32(ms[step]),
+                                 jnp.float32(es[step]))
+    out = measure.finalize(mom)
+    e64 = np.asarray(es, np.float64)
+    true_var = np.mean(e64 ** 2) - np.mean(e64) ** 2    # ~1e-10
+    assert true_var < 1e-9                               # regime check
+    np.testing.assert_allclose(out["E_var"], true_var, rtol=1e-3)
+    beta, n_spins = 0.44, 10**7
+    c_stream = obs.specific_heat_from_moments(out, beta, n_spins)
+    c_series = obs.specific_heat(es, beta, n_spins)
+    np.testing.assert_allclose(c_stream, c_series, rtol=1e-3)
+
+
 def test_engine_mesh_moments_include_e2(subproc):
     """The fori_loop mesh path streams E^2 so engine users get specific
     heat from moments alone (no series exists on that path)."""
@@ -198,7 +221,10 @@ def test_mesh_streamed_stats_bitwise_match_single_device(subproc):
     assert (got == jax.device_get(out_0)).all()
     q_host = jnp.stack([L.unblock(jnp.asarray(got[i])) for i in range(4)])
     assert float(mom.n) == 1.0
-    assert float(mom.e) == float(obs.energy_per_spin(q_host))
+    # n=1: the running reference IS the sample, deviation sums are zero
+    assert float(mom.e_ref) == float(obs.energy_per_spin(q_host))
+    assert float(mom.de) == 0.0
+    assert measure.finalize(mom)["E"] == float(obs.energy_per_spin(q_host))
     assert float(mom.m_abs) == abs(float(obs.magnetization(q_host)))
     print("MEASURE_MESH_OK")
     """, devices=4)

@@ -1,0 +1,132 @@
+"""3-D domain decomposition: sharded [D, H, W] cube == single-device
+``run_sweeps3d``, bitwise, plus the EngineConfig(dims=3, topology='mesh')
+end-to-end contract (ISSUE 5 acceptance criteria).
+
+Mesh tests run in subprocesses with virtual devices (see conftest)."""
+import pytest
+
+
+@pytest.mark.parametrize("mesh_spec", [
+    ("(2, 2)", "('data', 'model')", "()"),
+    ("(4, 1)", "('data', 'model')", "()"),
+    ("(2, 2, 2)", "('pod', 'data', 'model')", "('pod',)"),
+])
+def test_mesh3d_bitwise_equals_single_device(subproc, mesh_spec):
+    shape, axes, depth_axes = mesh_spec
+    out = subproc(f"""
+    import jax, jax.numpy as jnp
+    from repro.core import ising3d as I3, observables as obs
+    from repro.distributed import ising3d as d3
+    from repro.launch import mesh as mesh_lib
+
+    mesh = mesh_lib.make_mesh({shape}, {axes})
+    cfg = d3.Dist3DConfig(beta=0.3, depth_axes={depth_axes},
+                          row_axes=({axes}[-2],), col_axes=({axes}[-1],))
+    key = jax.random.PRNGKey(0)
+    full = I3.random_lattice3d(jax.random.PRNGKey(1), 8, 8, 8)
+    want, _ = I3.run_sweeps3d(full, key, 4, 0.3)
+
+    sh = d3.lattice_sharding(mesh, cfg)
+    got = d3.make_run_sweeps_fn(mesh, cfg, 4)(jax.device_put(full, sh), key)
+    assert (jax.device_get(got) == jax.device_get(want)).all(), "state"
+
+    # measured twin: identical evolution, exact psum'd stats
+    got2, mom = d3.make_run_chain_fn(mesh, cfg, 4)(
+        jax.device_put(full, sh), key)
+    assert (jax.device_get(got2) == jax.device_get(want)).all()
+    assert float(mom.n) == 4.0
+    m, e = d3.global_stats(mesh, cfg)(jax.device_put(got, sh))
+    host = jnp.asarray(got)
+    assert float(m) == float(jnp.mean(host.astype(jnp.float32)))
+    assert float(e) == float(obs.energy_per_spin3d(host))
+    print("MESH3D_BITWISE_OK")
+    """, devices=8)
+    assert "MESH3D_BITWISE_OK" in out
+
+
+def test_engine_mesh3d_end_to_end(subproc):
+    """EngineConfig(dims=3, topology='mesh') runs with streamed Moments,
+    stats(), chunked run_sweeps, and is bitwise the single-device 3-D
+    engine scenario under the same keys."""
+    out = subproc("""
+    import jax
+    from repro.api import EngineConfig, IsingEngine
+    from repro.core import observables as obs
+
+    kw = dict(size=8, beta=0.3, n_sweeps=4, dims=3)
+    mesh_eng = IsingEngine(EngineConfig(topology="mesh", mesh_shape=(2, 2),
+                                        mesh_axes=("data", "model"), **kw))
+    single = IsingEngine(EngineConfig(**kw))
+    k0, k1 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+
+    res = mesh_eng.run(mesh_eng.init(k0), k1)
+    ref = single.run(single.init(k0), k1)
+    assert (jax.device_get(res.state) == jax.device_get(ref.state)).all()
+    assert res.moments["n_samples"] == 4
+    assert res.magnetization is None   # fori_loop path streams moments only
+    c = obs.specific_heat_from_moments(res.moments, 0.3, 8 ** 3)
+    assert c >= -1e-6, c
+
+    m, e = mesh_eng.stats(res.state)
+    assert abs(m) <= 1.0 and -3.0 <= e <= 0.0
+
+    # chunked == straight (the checkpoint-cadence contract)
+    st = mesh_eng.init(k0)
+    a = mesh_eng.run_sweeps(st, k1, 4)
+    b = mesh_eng.run_sweeps(mesh_eng.init(k0), k1, 4)
+    assert (jax.device_get(a) == jax.device_get(b)).all()
+    assert mesh_eng.state_template().shape == (8, 8, 8)
+
+    # a cube side that does not tile the device grid is rejected
+    from repro.api.engine import EngineConfigError
+    try:
+        IsingEngine(EngineConfig(size=6, beta=0.3, dims=3,
+                                 topology="mesh", mesh_shape=(4, 1),
+                                 mesh_axes=("data", "model")))
+        raise AssertionError("expected EngineConfigError")
+    except EngineConfigError:
+        pass
+    print("ENGINE_MESH3D_OK")
+    """, devices=4)
+    assert "ENGINE_MESH3D_OK" in out
+
+
+def test_engine_mesh3d_config_errors():
+    from repro.api import EngineConfig, IsingEngine
+    from repro.api.engine import EngineConfigError
+
+    with pytest.raises(EngineConfigError):   # missing mesh_shape
+        IsingEngine(EngineConfig(size=8, beta=0.3, dims=3,
+                                 topology="mesh"))
+    with pytest.raises(EngineConfigError):   # betas on a 3-D mesh
+        IsingEngine(EngineConfig(size=8, betas=(0.2, 0.3), dims=3,
+                                 topology="mesh", mesh_shape=(1, 1)))
+    with pytest.raises(EngineConfigError):   # kernels are 2-D only
+        IsingEngine(EngineConfig(size=8, beta=0.3, dims=3,
+                                 topology="mesh", mesh_shape=(1, 1),
+                                 backend="pallas_lines"))
+
+
+def test_simulate_launcher_mesh3d_resumes(subproc, tmp_path):
+    """The production launcher drives the 3-D mesh scenario and restarts
+    from its checkpoint (satellite: restart safety per scenario)."""
+    import subprocess, sys, os
+    from pathlib import Path
+    ck = str(tmp_path / "cube")
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    common = [sys.executable, "-m", "repro.launch.simulate", "--devices",
+              "4", "--mesh", "2,2", "--dims", "3", "--block-size", "8",
+              "--blocks-per-device", "1", "--chunk", "5",
+              "--ckpt-dir", ck]
+    out1 = subprocess.run(common + ["--sweeps", "10"], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert out1.returncode == 0, out1.stderr
+    assert "sweep     10" in out1.stdout
+    out2 = subprocess.run(common + ["--sweeps", "15"], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert out2.returncode == 0, out2.stderr
+    assert "restored lattice at sweep 10" in out2.stdout
+    assert "sweep     15" in out2.stdout
