@@ -21,8 +21,8 @@ from pathlib import Path
 
 from benchmarks import common
 
-SECTIONS = ("fig4", "cluster", "potts", "mesh3d", "table1", "table2",
-            "kernel", "roofline")
+SECTIONS = ("fig4", "cluster", "potts", "mesh3d", "serve", "table1",
+            "table2", "kernel", "roofline")
 
 
 def _run_section(name: str, smoke: bool) -> int:
@@ -38,6 +38,9 @@ def _run_section(name: str, smoke: bool) -> int:
     if name == "mesh3d":
         from benchmarks import mesh3d
         return mesh3d.main(smoke=smoke)
+    if name == "serve":
+        from benchmarks import serve_load
+        return serve_load.main(smoke=smoke)
     if name == "table1":
         from benchmarks import table1_single_core
         table1_single_core.run(**({"sizes_blocks": (2, 4), "block_size": 32,

@@ -1,0 +1,96 @@
+"""Serving-plane load benchmark: requests/s and latency percentiles of the
+continuous-batched MC engine, plus the bitwise batching-independence gate.
+
+    PYTHONPATH=src python -m benchmarks.serve_load            # full load
+    PYTHONPATH=src python -m benchmarks.serve_load --smoke    # CI sizing
+
+Rows (us_per_call keeps the harness's "bigger = slower" contract so the
+perf-regression gate applies directly):
+
+* ``serve_per_request``   — total wall / n_requests (inverse throughput;
+                            derived column carries req/s)
+* ``serve_latency_p50``   — median submit-to-final latency
+* ``serve_latency_p99``   — tail latency under the closed-loop burst
+* ``serve_chunk``         — one compiled chunk of the hottest bucket,
+                            steady state (the serving hot path itself)
+
+Gate (always on, even in --smoke): one served request is re-run through a
+standalone ``IsingEngine`` with the same seed and the streamed moments
+must be bitwise identical — the continuous-batching invariant the whole
+plane is built on.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import emit
+
+
+def _percentile(sorted_vals, frac: float):
+    return sorted_vals[min(len(sorted_vals) - 1,
+                           int(frac * len(sorted_vals)))]
+
+
+def main(smoke: bool = False) -> int:
+    from repro.api import IsingEngine
+    from repro.launch.serve import make_workload
+    from repro.serve import MCServeEngine
+
+    if smoke:
+        n_requests, sizes, sweeps, samples = 8, (16,), 32, 2
+        width, chunk = 4, 8
+    else:
+        n_requests, sizes, sweeps, samples = 64, (32, 64), 400, 4
+        width, chunk = 8, 32
+
+    reqs = make_workload(n_requests, sizes, ("ising", "potts"), sweeps,
+                         samples, seed=0)
+    engine = MCServeEngine(replica_width=width, chunk_sweeps=chunk)
+
+    # Warmup: serve a short clone of every bucket shape so the timed pass
+    # measures steady-state serving, not tracing/compilation.
+    import dataclasses
+    warm = {r.bucket_key():
+            dataclasses.replace(r, n_sweeps=chunk, n_samples=1)
+            for r in reqs}
+    engine.serve(warm.values())
+
+    t0 = time.perf_counter()
+    results = engine.serve(reqs)
+    wall = time.perf_counter() - t0
+
+    lat = sorted(r.latency for r in results)
+    emit("serve_per_request", wall / n_requests,
+         derived=f"{n_requests / wall:.2f} req/s")
+    emit("serve_latency_p50", _percentile(lat, 0.50),
+         derived=f"{n_requests} reqs width={width} chunk={chunk}")
+    emit("serve_latency_p99", _percentile(lat, 0.99))
+
+    # Steady-state chunk cost of the hottest bucket (one step(), buckets
+    # already compiled): the per-turn unit of serving work.
+    refill = [r for r in reqs][:width]
+    for r in refill:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.step()
+    chunk_s = time.perf_counter() - t0
+    engine.run_until_idle()
+    emit("serve_chunk", chunk_s,
+         derived=f"{width}x{chunk} sweeps/bucket-turn")
+
+    # --- bitwise batching-independence gate --------------------------------
+    req, res = reqs[0], results[0]
+    ref = IsingEngine(req.engine_config()).simulate(seed=req.seed)
+    same = all(ref.moments[k] == res.moments[k] for k in ref.moments)
+    print(f"# gate: served moments bitwise == standalone engine: "
+          f"{'OK' if same else 'MISMATCH'}")
+    if not same:
+        print(f"#   served:     {res.moments}")
+        print(f"#   standalone: {ref.moments}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(smoke="--smoke" in sys.argv))

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Simulation-as-a-service demo: concurrent Monte Carlo requests through
+the continuous-batched serving engine, with streamed running moments.
+
+    PYTHONPATH=src python examples/serve_mc.py --requests 6 --size 32 \
+        --sweeps 200 --verify
+
+Requests of different models (Ising/Potts), dynamics (checkerboard /
+Swendsen-Wang), couplings, and lengths share vmapped replica slots; each
+streams running-moment snapshots as it progresses and finishes
+independently. ``--verify`` re-runs one request through a standalone
+``IsingEngine`` with the same seed and checks the served moments are
+bitwise identical — the batching-independence guarantee.
+"""
+import argparse
+
+from repro.api import IsingEngine
+from repro.core import observables as obs
+from repro.potts import state as potts_state
+from repro.serve import MCServeEngine, SimRequest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--size", type=int, default=32)
+    ap.add_argument("--sweeps", type=int, default=200)
+    ap.add_argument("--samples", type=int, default=4)
+    ap.add_argument("--replica-width", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", action="store_true")
+    args = ap.parse_args()
+
+    beta_ci = 1.0 / obs.critical_temperature()
+    templates = [
+        dict(beta=0.9 * beta_ci),
+        dict(beta=1.1 * beta_ci),
+        dict(beta=beta_ci, algorithm="swendsen_wang", dtype="float32"),
+        dict(beta=0.9 * potts_state.beta_c(3), model="potts", q=3,
+             rule="heat_bath"),
+        dict(beta=1.1 * potts_state.beta_c(3), model="potts", q=3,
+             algorithm="swendsen_wang"),
+        dict(beta=1.05 * beta_ci, algorithm="wolff", dtype="float32"),
+    ]
+    reqs = [SimRequest(L=args.size, n_sweeps=args.sweeps,
+                       n_samples=args.samples, seed=args.seed + i,
+                       **templates[i % len(templates)])
+            for i in range(args.requests)]
+
+    engine = MCServeEngine(replica_width=args.replica_width,
+                           chunk_sweeps=args.chunk)
+
+    def show(u):
+        tag = "DONE" if u.done else f"{u.sweeps_done:4d} sweeps"
+        print(f"  req {u.request_id}: {tag:>11s}  "
+              f"|m|={u.moments['m_abs']:.4f}  E={u.moments['E']:+.4f}  "
+              f"U4={u.moments['U4']:+.3f}")
+
+    print(f"serving {len(reqs)} concurrent MC requests "
+          f"(width={args.replica_width}, chunk={args.chunk})")
+    results = engine.serve(reqs, callback=show)
+    print(f"all {len(results)} requests served; per-request snapshots: "
+          f"{[len(r.updates) for r in results]}")
+
+    if args.verify:
+        req, res = reqs[0], results[0]
+        ref = IsingEngine(req.engine_config()).simulate(seed=req.seed)
+        same = all(ref.moments[k] == res.moments[k] for k in ref.moments)
+        print(f"bitwise batching-independence (req 0 vs standalone "
+              f"IsingEngine): {'OK' if same else 'MISMATCH'}")
+        if not same:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -329,6 +329,126 @@ def _config_error(msg: str):
     raise EngineConfigError(f"invalid EngineConfig: {msg}")
 
 
+def replica_sweep_fns(cfg: EngineConfig):
+    """The per-slot sweep family behind every vmapped multi-chain harness.
+
+    Returns ``(one_sweep, one_sweep_measured, rep_args)``:
+
+    * ``one_sweep(state, key, rep_arg, step) -> state`` and
+      ``one_sweep_measured(state, key, rep_arg, step) -> (state, (m, e))``
+      advance ONE chain by one sweep. Both are vmappable over leading axes
+      of ``(state, key, rep_arg, step)`` — a batch of chains with
+      independent keys, couplings, and even sweep counters runs in one
+      compiled program.
+    * ``rep_args(betas)`` maps an f32 coupling vector to the per-slot
+      traced sweep argument: beta itself for single-site dynamics, the
+      u24 bond-activation threshold for cluster dynamics (the traced
+      thresholds are bitwise-equal to the static trace-time tables —
+      pinned in ``tests/test_cluster.py`` / ``tests/test_potts.py``).
+
+    RNG contract (what the serving plane builds on): every uniform draw is
+    addressed by ``(key, step)`` alone — ``fold_in(key, step)`` /
+    ``sweep_probs(key, step)`` counters, never sequentially split state —
+    so a chain advanced in chunks with absolute step indices is
+    bitwise-identical to one straight run, and the SLOT a batching harness
+    assigns a chain to cannot perturb its stream. The ensemble runners
+    below and :class:`repro.serve.engine.MCServeEngine` are both call
+    sites of this one function, which is what makes the serving plane's
+    bitwise batching-independence guarantee structural rather than
+    accidental.
+
+    State layouts per scenario family: compact quads ``[4, R, C]`` for 2-D
+    Ising checkerboard, the full ``[L, L]`` spin view for Ising cluster
+    sweeps, the full ``[H, W]`` int32 colour view for every Potts dynamics,
+    and the ``[D, H, W]`` cube for 3-D Metropolis.
+    """
+    c = cfg
+    if c.model == "potts":
+        q = c.resolved_q()
+        if c.algorithm != "metropolis":
+            from repro.potts import bonds as potts_bonds
+            from repro.potts import sweep as potts_sweep
+            algo = c.algorithm
+
+            def one_sweep(f, k, t, step):
+                return potts_sweep.cluster_sweep(
+                    f, jax.random.fold_in(k, step), t, q, algo)
+
+            def one_sweep_measured(f, k, t, step):
+                return potts_sweep.cluster_sweep_measured(
+                    f, jax.random.fold_in(k, step), t, q, algo)
+
+            def rep_args(betas):
+                return potts_bonds.bond_threshold_traced(
+                    jnp.asarray(betas, jnp.float32))
+
+            return one_sweep, one_sweep_measured, rep_args
+
+        from repro.potts import rules as potts_rules
+        rule = c.rule
+
+        def one_sweep(f, k, beta, step):
+            return potts_rules.checkerboard_sweep(
+                f, jax.random.fold_in(k, step), beta, q, rule)
+
+        def one_sweep_measured(f, k, beta, step):
+            return potts_rules.checkerboard_sweep_measured(
+                f, jax.random.fold_in(k, step), beta, q, rule)
+
+        return one_sweep, one_sweep_measured, _beta_args
+
+    if c.dims == 3:
+        def one_sweep(f, k, beta, step):
+            return I3.sweep3d(f, k, step, beta)
+
+        def one_sweep_measured(f, k, beta, step):
+            f = I3.sweep3d(f, k, step, beta)
+            return f, (jnp.mean(f.astype(jnp.float32)),
+                       obs.energy_per_spin3d(f))
+
+        return one_sweep, one_sweep_measured, _beta_args
+
+    if c.algorithm != "metropolis":
+        from repro.cluster import bonds as cbonds
+        from repro.cluster import sweep as csweep
+        algo = c.algorithm
+
+        def one_sweep(f, k, t, step):
+            return csweep.cluster_sweep(
+                f, jax.random.fold_in(k, step), t, algo)
+
+        def one_sweep_measured(f, k, t, step):
+            return csweep.cluster_sweep_measured(
+                f, jax.random.fold_in(k, step), t, algo)
+
+        def rep_args(betas):
+            return cbonds.bond_threshold_traced(
+                jnp.asarray(betas, jnp.float32))
+
+        return one_sweep, one_sweep_measured, rep_args
+
+    bs = c.resolved_block_size()
+    pdt = jnp.dtype(c.prob_dtype)
+    rule = c.probs_rule()
+    field = c.field
+
+    def one_sweep(q, k, beta, step):
+        probs = sampler.sweep_probs(k, step, q.shape[1:], pdt)
+        return cb.sweep_compact(q, probs, beta, bs, rule, field=field)
+
+    def one_sweep_measured(q, k, beta, step):
+        probs = sampler.sweep_probs(k, step, q.shape[1:], pdt)
+        return measure.sweep_compact_measured(q, probs, beta, bs, rule,
+                                              field=field)
+
+    return one_sweep, one_sweep_measured, _beta_args
+
+
+def _beta_args(betas):
+    """Identity rep_args: dynamics whose traced per-slot argument is beta."""
+    return jnp.asarray(betas, jnp.float32)
+
+
 @dataclasses.dataclass
 class EngineResult:
     """What a run hands back.
@@ -666,23 +786,9 @@ class IsingEngine:
     def _ensemble_runner(self):
         """Jitted R-replica multi-β chain: vmap over replicas, scan over
         sweeps, observables fused into the compiled loop."""
-        c = self.cfg
-        betas = jnp.asarray(c.betas, jnp.float32)
-        bs = c.resolved_block_size()
-        pdt = jnp.dtype(c.prob_dtype)
-        rule = c.probs_rule()
-
-        def one_sweep(q, k, beta, step):
-            probs = sampler.sweep_probs(k, step, q.shape[1:], pdt)
-            return cb.sweep_compact(q, probs, beta, bs, rule,
-                                    field=c.field)
-
-        def one_sweep_measured(q, k, beta, step):
-            probs = sampler.sweep_probs(k, step, q.shape[1:], pdt)
-            return measure.sweep_compact_measured(q, probs, beta, bs, rule,
-                                                  field=c.field)
-
-        return self._replica_harness(one_sweep, one_sweep_measured, betas)
+        one_sweep, one_sweep_measured, rep_args = replica_sweep_fns(self.cfg)
+        return self._replica_harness(one_sweep, one_sweep_measured,
+                                     rep_args(self.cfg.betas))
 
     def _kernel_runner(self):
         """Pallas / ref backend chain (single device, scalar β).
@@ -777,19 +883,9 @@ class IsingEngine:
 
             return jax.jit(run)
 
-        thresholds = cbonds.bond_threshold_traced(
-            jnp.asarray(c.betas, jnp.float32))
-
-        def one_sweep(f, k, t, step):
-            return csweep.cluster_sweep(f, jax.random.fold_in(k, step),
-                                        t, algo)
-
-        def one_sweep_measured(f, k, t, step):
-            return csweep.cluster_sweep_measured(
-                f, jax.random.fold_in(k, step), t, algo)
-
+        one_sweep, one_sweep_measured, rep_args = replica_sweep_fns(c)
         return self._replica_harness(one_sweep, one_sweep_measured,
-                                     thresholds,
+                                     rep_args(c.betas),
                                      pre=jax.vmap(L.from_quads),
                                      post=jax.vmap(L.to_quads))
 
@@ -835,17 +931,9 @@ class IsingEngine:
 
             return jax.jit(run)
 
-        betas = jnp.asarray(c.betas, jnp.float32)
-
-        def one_sweep(f, k, beta, step):
-            return potts_rules.checkerboard_sweep(
-                f, jax.random.fold_in(k, step), beta, q, rule)
-
-        def one_sweep_measured(f, k, beta, step):
-            return potts_rules.checkerboard_sweep_measured(
-                f, jax.random.fold_in(k, step), beta, q, rule)
-
-        return self._replica_harness(one_sweep, one_sweep_measured, betas)
+        one_sweep, one_sweep_measured, rep_args = replica_sweep_fns(c)
+        return self._replica_harness(one_sweep, one_sweep_measured,
+                                     rep_args(c.betas))
 
     def _potts_cluster_runner(self):
         """Swendsen-Wang / Wolff Potts chain on the full [H, W] colour
@@ -879,19 +967,9 @@ class IsingEngine:
 
             return jax.jit(run)
 
-        thresholds = potts_bonds.bond_threshold_traced(
-            jnp.asarray(c.betas, jnp.float32))
-
-        def one_sweep(f, k, t, step):
-            return potts_sweep.cluster_sweep(
-                f, jax.random.fold_in(k, step), t, q, algo)
-
-        def one_sweep_measured(f, k, t, step):
-            return potts_sweep.cluster_sweep_measured(
-                f, jax.random.fold_in(k, step), t, q, algo)
-
+        one_sweep, one_sweep_measured, rep_args = replica_sweep_fns(c)
         return self._replica_harness(one_sweep, one_sweep_measured,
-                                     thresholds)
+                                     rep_args(c.betas))
 
     def _potts_cluster_mesh_runner(self, n_sweeps: int,
                                    measured: bool = False):

@@ -1,0 +1,24 @@
+"""Monte Carlo serving plane: continuous-batched simulation requests.
+
+    from repro.serve import MCServeEngine, SimRequest
+
+    engine = MCServeEngine(replica_width=8, chunk_sweeps=16)
+    rid = engine.submit(SimRequest(L=64, beta=0.44, n_sweeps=200,
+                                   n_samples=4, seed=7))
+    engine.run_until_idle()
+    print(engine.result(rid).moments)
+
+Every request's streamed moments are bitwise equal to a standalone
+``IsingEngine(request.engine_config()).simulate(seed=request.seed)`` run,
+independent of how requests were bucketed, slotted, or interleaved — see
+:mod:`repro.serve.engine` for the argument and ``tests/test_serve.py``
+for the pins.
+"""
+from repro.serve.engine import MCServeEngine, slot_template
+from repro.serve.request import (CANCELLED, DONE, PENDING, RUNNING,
+                                 RequestResult, RequestUpdate, SimRequest)
+from repro.serve.scheduler import BucketScheduler
+
+__all__ = ["MCServeEngine", "SimRequest", "RequestResult", "RequestUpdate",
+           "BucketScheduler", "slot_template",
+           "PENDING", "RUNNING", "DONE", "CANCELLED"]

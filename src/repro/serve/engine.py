@@ -1,63 +1,368 @@
-"""Batched serving engine: prefill once, then jitted single-token decode.
+"""Continuous-batched Monte Carlo serving engine.
 
-Matches the dry-run's ``serve_step``: decode lowers one new token against a
-pre-existing cache (the ``decode_*``/``long_*`` shapes), prefill lowers the
-full-context forward (the ``prefill_*`` shapes).
+This is the millions-of-users front door the ROADMAP points at: many
+concurrent :class:`repro.serve.request.SimRequest` jobs, bucketed by
+compiled shape, padded to a fixed replica width, and driven through ONE
+vmapped chunk program per bucket — the same trick LM servers use for
+token streams, applied to MCMC chains:
+
+* **bucket** — requests sharing ``(model, q, dims, L, algorithm, rule,
+  dtype)`` ride one compiled program; the scheduler
+  (:class:`repro.serve.scheduler.BucketScheduler`) queues per bucket,
+  FIFO within and round-robin across (starvation-free).
+* **slot** — each bucket run owns ``replica_width`` replica slots; a
+  request occupies one slot and carries its OWN chain key and sweep
+  counter. Unoccupied slots are padded with a dummy lattice whose output
+  is discarded before any statistics are read.
+* **chunk** — each ``step()`` advances one bucket by ``chunk_sweeps``
+  sweeps (vmapped scan). At chunk boundaries finished/cancelled requests
+  free their slots and queued requests are admitted — continuous
+  batching: a long chain never blocks short ones behind it.
+* **stream** — per-sweep (m, E) scalars come back per slot; each request
+  accumulates its own series and emits running-moment snapshots
+  (``measure.finalize`` dicts) at its ``sample_points()``.
+
+Bitwise batching-independence (the serving plane's testable contract):
+every uniform draw in every dynamics family is counter-addressed by
+``(chain_key, absolute_step)`` — :func:`repro.api.engine.replica_sweep_fns`
+is the single sweep-family source shared with the engine's ensemble
+harness — so a request's streamed moments are bitwise equal to a
+standalone ``IsingEngine(request.engine_config()).simulate(seed)`` run
+regardless of bucket packing, slot assignment, chunk boundaries, or what
+its neighbours are doing.  ``tests/test_serve.py`` pins this across
+interleaving schedules and models.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models import transformer
+from repro.api import IsingEngine
+from repro.api import engine as api_engine
+from repro.core import lattice as L
+from repro.core import measure
+from repro.serve import request as rq
+from repro.serve.scheduler import BucketScheduler
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, max_len: int):
-        self.cfg = cfg
-        self.params = params
-        self.max_len = max_len
-        self._prefill = jax.jit(
-            functools.partial(transformer.prefill, cfg=cfg,
-                              max_len=max_len))
-        self._decode = jax.jit(
-            functools.partial(transformer.decode_step, cfg=cfg))
+def slot_template(cfg) -> jax.Array:
+    """Padding lattice for an unoccupied replica slot: zeros in the
+    bucket's slot layout (a legal input to every sweep family — pad slots
+    are swept and discarded, never read)."""
+    size = cfg.size
+    if cfg.model == "potts":
+        return jnp.zeros((size, size), jnp.int32)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.dims == 3:
+        return jnp.zeros((size, size, size), dt)
+    if cfg.algorithm != "metropolis":
+        return jnp.zeros((size, size), dt)          # cluster: full view
+    return jnp.zeros((4, size // 2, size // 2), dt)  # checkerboard quads
 
-    def _greedy(self, logits):
-        cfg = self.cfg
-        if cfg.n_codebooks:
-            b = logits.shape[0]
-            lg = logits[:, -1].reshape(b, cfg.n_codebooks, cfg.padded_vocab)
-            lg = lg[..., :cfg.vocab_size]
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
-        lg = logits[:, -1, :self.cfg.vocab_size]
-        return jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
 
-    def generate(self, prompt_tokens: jax.Array, n_new: int,
-                 extra: Optional[dict] = None) -> jax.Array:
-        """prompt_tokens: [B, S] (or [B, S, nq]); returns [B, n_new(, nq)]."""
-        cfg = self.cfg
-        b, s = prompt_tokens.shape[0], prompt_tokens.shape[1]
-        batch = {"tokens": prompt_tokens, **(extra or {})}
-        if cfg.family == "vlm" and "positions" not in batch:
-            batch["positions"] = jnp.broadcast_to(
-                jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, s, 3))
+def _slot_state(cfg, eng: IsingEngine, k_init: jax.Array) -> jax.Array:
+    """Initial slot state — the engine's own init, converted to the slot
+    layout (Ising cluster sweeps run on the full view; the engine stores
+    quads)."""
+    state = eng.init(k_init)
+    if (cfg.model == "ising" and cfg.dims == 2
+            and cfg.algorithm != "metropolis"):
+        return L.from_quads(state)
+    return state
 
-        # one-shot prefill: caches padded out to max_len for the decode loop
-        logits, states = self._prefill(params=self.params, batch=batch)
 
+@dataclasses.dataclass
+class _Tracked:
+    """Host-side record of one live request."""
+    result: rq.RequestResult
+    chain_key: jax.Array
+    state: Optional[jax.Array]
+    sweeps_done: int = 0
+    next_sample: int = 0
+    slot: Optional[tuple] = None          # (bucket_key, slot index) | None
+    callback: Optional[Callable] = None
+    m_buf: Optional[np.ndarray] = None    # f32 [n_sweeps], filled to done
+    e_buf: Optional[np.ndarray] = None
+
+    @property
+    def request(self) -> rq.SimRequest:
+        return self.result.request
+
+    @property
+    def status(self) -> str:
+        return self.result.status
+
+
+class _BucketRun:
+    """One active bucket: ``width`` replica slots + its compiled runner."""
+
+    def __init__(self, bucket_key: tuple, cfg, width: int):
+        self.bucket_key = bucket_key
+        self.cfg = cfg                    # representative EngineConfig
+        self.width = width
+        self.slots: list = [None] * width  # request ids (or None = pad)
+        self.template = slot_template(cfg)
+        self.pad_key = jax.random.PRNGKey(0)
+
+    def free_slots(self) -> list:
+        return [i for i, rid in enumerate(self.slots) if rid is None]
+
+    def empty(self) -> bool:
+        return all(rid is None for rid in self.slots)
+
+
+class MCServeEngine:
+    """Simulation-as-a-service: submit/cancel/step/poll over SimRequests.
+
+    Deterministic given the call sequence — wall clocks are recorded for
+    latency reporting but never steer scheduling — so randomized
+    submit/cancel schedules are exactly replayable in tests.
+    """
+
+    def __init__(self, replica_width: int = 8, chunk_sweeps: int = 16):
+        if replica_width < 1:
+            raise ValueError(f"replica_width must be >= 1, got "
+                             f"{replica_width}")
+        if chunk_sweeps < 1:
+            raise ValueError(f"chunk_sweeps must be >= 1, got "
+                             f"{chunk_sweeps}")
+        self.replica_width = replica_width
+        self.chunk_sweeps = chunk_sweeps
+        self.scheduler = BucketScheduler()
+        self._requests: dict = {}
+        self._active: "OrderedDict[tuple, _BucketRun]" = OrderedDict()
+        self._service: deque = deque()    # round-robin over active buckets
+        self._runners: dict = {}          # bucket_key -> jitted chunk fn
+        self._next_id = 0
+
+    # ------------------------------------------------------------------
+    # Submission / cancellation / inspection
+    # ------------------------------------------------------------------
+
+    def submit(self, req: rq.SimRequest,
+               callback: Optional[Callable] = None) -> int:
+        """Validate and enqueue a request; returns its id. ``callback``
+        (if given) fires on every streamed :class:`RequestUpdate`."""
+        req.validate()
+        rid = self._next_id
+        self._next_id += 1
+        k_init, k_chain = jax.random.split(jax.random.PRNGKey(req.seed))
+        # Init now (cheap, unjitted) so admission at a chunk boundary is
+        # a pure slot write. Same split(PRNGKey(seed)) as engine.simulate.
+        cfg = req.engine_config()
+        state = _slot_state(cfg, IsingEngine(cfg), k_init)
+        self._requests[rid] = _Tracked(
+            result=rq.RequestResult(request_id=rid, request=req,
+                                    status=rq.PENDING,
+                                    submitted_at=time.perf_counter()),
+            chain_key=k_chain, state=state, callback=callback,
+            m_buf=np.empty(req.n_sweeps, np.float32),
+            e_buf=np.empty(req.n_sweeps, np.float32))
+        self.scheduler.submit(rid, req.bucket_key())
+        return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a pending or running request. Running requests leave
+        their slot at the next chunk boundary; already-terminal requests
+        return False."""
+        t = self._requests.get(rid)
+        if t is None or t.status in (rq.DONE, rq.CANCELLED):
+            return False
+        if t.status == rq.PENDING:
+            self.scheduler.cancel(rid)
+        t.result.status = rq.CANCELLED
+        t.result.finished_at = time.perf_counter()
+        t.state = None
+        return True
+
+    def status(self, rid: int) -> str:
+        return self._requests[rid].status
+
+    def result(self, rid: int) -> rq.RequestResult:
+        return self._requests[rid].result
+
+    def updates(self, rid: int) -> list:
+        """All snapshots streamed so far for one request."""
+        return list(self._requests[rid].result.updates)
+
+    @property
+    def idle(self) -> bool:
+        return not self._active and not self.scheduler.pending()
+
+    # ------------------------------------------------------------------
+    # The serving loop
+    # ------------------------------------------------------------------
+
+    def step(self) -> list:
+        """One scheduling turn: activate buckets with pending work, pick
+        the next active bucket round-robin, admit queued requests into its
+        free slots, sweep one chunk, harvest per-slot streams. Returns the
+        RequestUpdates emitted this turn."""
+        self._activate()
+        if not self._service:
+            return []
+        bucket_key = self._service[0]
+        self._service.rotate(-1)
+        run = self._active[bucket_key]
+        self._admit(run)
+        if run.empty():
+            self._deactivate(bucket_key)
+            return []
+        updates = self._advance(run)
+        if run.empty() and not self.scheduler.pending(bucket_key):
+            self._deactivate(bucket_key)
+        return updates
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> dict:
+        """Drain every queue; returns {request_id: RequestResult} for all
+        requests that reached a terminal state."""
+        steps = 0
+        while not self.idle:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"serving loop did not drain in {max_steps} steps "
+                    f"(pending={self.scheduler.pending()}, "
+                    f"active={list(self._active)})")
+        return {rid: t.result for rid, t in self._requests.items()
+                if t.status in (rq.DONE, rq.CANCELLED)}
+
+    def serve(self, requests, callback: Optional[Callable] = None) -> list:
+        """Convenience batch API: submit everything, drain, return results
+        in submission order."""
+        rids = [self.submit(r, callback) for r in requests]
+        self.run_until_idle()
+        return [self._requests[rid].result for rid in rids]
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+
+    def _activate(self) -> None:
+        while True:
+            key = self.scheduler.next_bucket(exclude=tuple(self._active))
+            if key is None:
+                return
+            rid = self.scheduler.peek(key)
+            cfg = self._requests[rid].request.engine_config()
+            self._active[key] = _BucketRun(key, cfg, self.replica_width)
+            self._service.append(key)
+
+    def _deactivate(self, bucket_key: tuple) -> None:
+        self._active.pop(bucket_key, None)
+        try:
+            self._service.remove(bucket_key)
+        except ValueError:
+            pass
+
+    def _admit(self, run: _BucketRun) -> None:
+        free = run.free_slots()
+        for slot, rid in zip(free, self.scheduler.take(run.bucket_key,
+                                                       len(free))):
+            t = self._requests[rid]
+            if t.status == rq.CANCELLED:   # cancelled while queued
+                continue
+            run.slots[slot] = rid
+            t.slot = (run.bucket_key, slot)
+            t.result.status = rq.RUNNING
+            t.result.started_at = time.perf_counter()
+
+    def _runner(self, run: _BucketRun):
+        key = run.bucket_key
+        if key not in self._runners:
+            one_sweep, one_sweep_measured, rep_args = \
+                api_engine.replica_sweep_fns(run.cfg)
+            chunk = self.chunk_sweeps
+
+            def run_chunk(states, keys, betas, offsets):
+                args = rep_args(betas)
+
+                def body(carry, j):
+                    s, (m, e) = jax.vmap(
+                        one_sweep_measured, in_axes=(0, 0, 0, 0))(
+                        carry, keys, args, offsets + j)
+                    return s, (m, e)
+
+                final, (ms, es) = jax.lax.scan(body, states,
+                                               jnp.arange(chunk))
+                return final, ms.T, es.T       # [width, chunk]
+
+            self._runners[key] = jax.jit(run_chunk)
+        return self._runners[key]
+
+    def _advance(self, run: _BucketRun) -> list:
+        """Sweep one chunk of one bucket and harvest per-slot streams."""
+        states, keys, betas, offsets = [], [], [], []
+        for rid in run.slots:
+            t = self._requests[rid] if rid is not None else None
+            if t is None or t.status != rq.RUNNING:
+                states.append(run.template)
+                keys.append(run.pad_key)
+                betas.append(0.5)
+                offsets.append(0)
+            else:
+                states.append(t.state)
+                keys.append(t.chain_key)
+                betas.append(t.request.beta)
+                offsets.append(t.sweeps_done)
+        final, ms, es = self._runner(run)(
+            jnp.stack(states), jnp.stack(keys),
+            jnp.asarray(betas, jnp.float32),
+            jnp.asarray(offsets, jnp.int32))
+        ms = np.asarray(ms, np.float32)
+        es = np.asarray(es, np.float32)
+
+        updates: list = []
+        for slot, rid in enumerate(run.slots):
+            if rid is None:
+                continue                       # pad slot: output discarded
+            t = self._requests[rid]
+            if t.status != rq.RUNNING:         # cancelled mid-chunk
+                run.slots[slot] = None
+                t.slot = None
+                continue
+            take = min(self.chunk_sweeps,
+                       t.request.n_sweeps - t.sweeps_done)
+            t.m_buf[t.sweeps_done:t.sweeps_done + take] = ms[slot, :take]
+            t.e_buf[t.sweeps_done:t.sweeps_done + take] = es[slot, :take]
+            t.sweeps_done += take
+            if t.sweeps_done >= t.request.n_sweeps:
+                run.slots[slot] = None         # free the slot
+                t.slot = None
+                t.state = None
+            else:
+                t.state = final[slot]
+            updates.extend(self._emit_snapshots(t))
+        return updates
+
+    def _emit_snapshots(self, t: _Tracked) -> list:
+        """Emit every snapshot whose sample point the request has crossed;
+        the final one marks the request DONE."""
+        points = t.request.sample_points()
         out = []
-        tok = self._greedy(logits)
-        for i in range(n_new):
-            out.append(tok)
-            step_batch = {"tokens": tok, "pos": jnp.asarray(s + i, jnp.int32)}
-            if cfg.family == "vlm":
-                step_batch["positions"] = jnp.full((b, 1, 3), s + i, jnp.int32)
-            logits, states = self._decode(params=self.params, states=states,
-                                          batch=step_batch)
-            tok = self._greedy(logits)
-        return jnp.concatenate(out, axis=1)
+        while (t.next_sample < len(points)
+               and points[t.next_sample] <= t.sweeps_done):
+            p = points[t.next_sample]
+            t.next_sample += 1
+            mom = measure.finalize(measure.moments_from_series(
+                t.m_buf[:p], t.e_buf[:p]))
+            done = p >= t.request.n_sweeps
+            upd = rq.RequestUpdate(t.result.request_id, p, done, mom)
+            t.result.updates.append(upd)
+            if done:
+                t.result.status = rq.DONE
+                t.result.moments = mom
+                t.result.magnetization = t.m_buf
+                t.result.energy = t.e_buf
+                t.result.finished_at = time.perf_counter()
+            if t.callback is not None:
+                t.callback(upd)
+            out.append(upd)
+        return out

@@ -55,6 +55,16 @@ def run_in_subprocess(code: str, devices: int = 8, timeout: int = 900,
     return proc.stdout
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "statistical: equilibrium/autocorrelation comparisons on finite MC "
+        "series. Seeds are pinned (deterministic on a fixed jax version) "
+        "but the assertions are tolerance-bounded, not bitwise, and the "
+        "runs are long; CI executes them in a separate non-blocking job "
+        "(-m statistical) so the blocking suite stays fast and exact.")
+
+
 @pytest.fixture(scope="session")
 def subproc():
     return run_in_subprocess

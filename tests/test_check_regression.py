@@ -1,0 +1,137 @@
+"""The perf gate itself is load-bearing CI infrastructure — every PR's
+benchmarks pass through ``benchmarks.check_regression`` — so its branch
+behaviour is pinned here: missing baselines, missing fresh files, the 2x
+factor, the CI-noise floor, one-sided rows, and the section filter.
+
+All tests drive ``main(argv)`` directly against tmp_path fixtures and
+assert on both the exit code (the CI contract) and the printed report
+(what a contributor debugging a red gate actually reads).
+"""
+import json
+
+import pytest
+
+from benchmarks import check_regression
+
+
+def write_bench(directory, section, rows):
+    """Write one BENCH_<section>.json with {name: us_per_call} rows."""
+    payload = {"section": section, "smoke": True, "took_s": 0.1,
+               "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                        for n, us in rows.items()]}
+    path = directory / f"BENCH_{section}.json"
+    path.write_text(json.dumps(payload))
+    return path
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    return base, fresh
+
+
+def run(base, fresh, *extra):
+    return check_regression.main(["--baseline-dir", str(base),
+                                  "--fresh-dir", str(fresh), *extra])
+
+
+def test_no_baselines_fails(dirs, capsys):
+    """An empty baseline dir is a broken setup (wrong path, lost files),
+    not a clean pass — the gate must go red, loudly."""
+    base, fresh = dirs
+    assert run(base, fresh) == 1
+    assert "no BENCH_*.json baselines" in capsys.readouterr().out
+
+
+def test_missing_fresh_file_skips_section(dirs, capsys):
+    """A baseline with no fresh counterpart (section not re-run in this
+    CI job) is skipped with a note, never failed."""
+    base, fresh = dirs
+    write_bench(base, "fig4", {"sweep": 5000.0})
+    assert run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "no fresh rows" in out and "skipped" in out
+
+
+def test_regression_above_floor_fails(dirs, capsys):
+    base, fresh = dirs
+    write_bench(base, "fig4", {"sweep": 5000.0})
+    write_bench(fresh, "fig4", {"sweep": 15000.0})      # 3x > 2x gate
+    assert run(base, fresh) == 1
+    out = capsys.readouterr().out
+    assert "[fig4] FAIL" in out
+    assert "! sweep" in out and "3.00x" in out
+
+
+def test_regression_below_floor_tolerated(dirs, capsys):
+    """Sub-floor rows are scheduler weather: a 10x swing on a 100 us row
+    must not fail the gate."""
+    base, fresh = dirs
+    write_bench(base, "fig4", {"tiny": 100.0})
+    write_bench(fresh, "fig4", {"tiny": 1000.0})        # 10x but < 2000 us
+    assert run(base, fresh) == 0
+    assert "[fig4] ok" in capsys.readouterr().out
+
+
+def test_floor_is_configurable(dirs):
+    """The same sub-floor swing fails once --floor-us is lowered under
+    the fresh time (pins that the floor compares the FRESH side)."""
+    base, fresh = dirs
+    write_bench(base, "fig4", {"tiny": 100.0})
+    write_bench(fresh, "fig4", {"tiny": 1000.0})
+    assert run(base, fresh, "--floor-us", "500") == 1
+
+
+def test_within_factor_passes(dirs, capsys):
+    base, fresh = dirs
+    write_bench(base, "fig4", {"sweep": 5000.0})
+    write_bench(fresh, "fig4", {"sweep": 9900.0})       # 1.98x < 2x
+    assert run(base, fresh) == 0
+    assert "[fig4] ok" in capsys.readouterr().out
+
+
+def test_factor_is_configurable(dirs):
+    base, fresh = dirs
+    write_bench(base, "fig4", {"sweep": 5000.0})
+    write_bench(fresh, "fig4", {"sweep": 9900.0})
+    assert run(base, fresh, "--factor", "1.5") == 1
+
+
+def test_one_sided_rows_noted_never_fail(dirs, capsys):
+    """Row sets drift as PRs land: baseline-only rows get a '~' note,
+    fresh-only rows a '+' note, and neither fails the gate."""
+    base, fresh = dirs
+    write_bench(base, "fig4", {"removed": 5000.0, "kept": 5000.0})
+    write_bench(fresh, "fig4", {"kept": 5100.0, "added": 9999.0})
+    assert run(base, fresh) == 0
+    out = capsys.readouterr().out
+    assert "~ removed" in out and "baseline only" in out
+    assert "+ added" in out and "no baseline yet" in out
+
+
+def test_sections_filter(dirs, capsys):
+    """--sections restricts the gate: a regression in an unselected
+    section is invisible; selecting it flips the exit code."""
+    base, fresh = dirs
+    write_bench(base, "fig4", {"sweep": 5000.0})
+    write_bench(fresh, "fig4", {"sweep": 5000.0})
+    write_bench(base, "serve", {"serve_chunk": 5000.0})
+    write_bench(fresh, "serve", {"serve_chunk": 50000.0})
+    assert run(base, fresh, "--sections", "fig4") == 0
+    assert "serve" not in capsys.readouterr().out
+    assert run(base, fresh, "--sections", "serve") == 1
+    assert run(base, fresh) == 1
+
+
+def test_multiple_sections_report_independently(dirs, capsys):
+    base, fresh = dirs
+    write_bench(base, "fig4", {"sweep": 5000.0})
+    write_bench(fresh, "fig4", {"sweep": 5000.0})
+    write_bench(base, "serve", {"serve_chunk": 5000.0})
+    write_bench(fresh, "serve", {"serve_chunk": 50000.0})
+    assert run(base, fresh) == 1
+    out = capsys.readouterr().out
+    assert "[fig4] ok" in out and "[serve] FAIL" in out

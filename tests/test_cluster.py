@@ -330,10 +330,18 @@ def _binned_stats(ms, es, nbins=8):
     return vals.mean(1), vals.std(1, ddof=1) / np.sqrt(nbins)
 
 
+@pytest.mark.statistical
 @pytest.mark.parametrize("beta_factor", [0.9, 1.0, 1.1])
 def test_sw_equilibrium_matches_metropolis_64(beta_factor):
     """|m|, E, U4 agree between SW and Metropolis on 64^2 within combined
-    binned stderr — same Boltzmann measure, different dynamics."""
+    binned stderr — same Boltzmann measure, different dynamics.
+
+    Tolerance: 5 sigma of the combined binned stderr (binning absorbs
+    autocorrelation) + 0.02 absolute slack for residual finite-chain bias
+    near beta_c where tau_int inflates the true error beyond the binned
+    estimate. Seeds 42/43 are pinned, so on a fixed jax version this test
+    is deterministic; the margin is what makes it survive a jax/XLA bump
+    reshuffling the underlying streams."""
     from repro.api import EngineConfig, IsingEngine
     beta = beta_factor * BETA_C
     size = 64
@@ -358,9 +366,15 @@ def test_sw_equilibrium_matches_metropolis_64(beta_factor):
             f"sw={g:.4f} tol={5 * s + 0.02:.4f}")
 
 
+@pytest.mark.statistical
 def test_tau_collapse_at_tc_128():
     """The headline: tau_int(|m|) at T_c on 128^2 is >= 5x smaller for
-    Swendsen-Wang than for checkerboard Metropolis."""
+    Swendsen-Wang than for checkerboard Metropolis.
+
+    Thresholds: physics predicts tau_SW = O(1) vs tau_Metropolis ~ L^2.15
+    (>> 100 at L=128), so the 5x ratio floor and tau_c < 20 ceiling sit an
+    order of magnitude inside the expected gap — loose enough that the
+    windowed tau estimator's bias on pinned seeds 7/8 cannot cross them."""
     from repro.api import EngineConfig, IsingEngine
 
     eng_m = IsingEngine(EngineConfig(size=128, beta=BETA_C, n_sweeps=6000,

@@ -56,10 +56,11 @@ def test_train_example_runs_and_learns():
 
 
 def test_serve_example_runs():
-    p = _example(["examples/serve_lm.py", "--arch", "qwen3-0.6b", "--tiny",
-                  "--batch", "2", "--new-tokens", "8"])
+    p = _example(["examples/serve_mc.py", "--requests", "4", "--size", "16",
+                  "--sweeps", "40", "--samples", "2", "--chunk", "8",
+                  "--verify"])
     assert p.returncode == 0, p.stderr
-    assert "generated" in p.stdout.lower()
+    assert "bitwise" in p.stdout and "OK" in p.stdout
 
 
 def test_phase_transition_example_runs():
